@@ -1,0 +1,134 @@
+"""Microbenchmarks for the serving/kernel layer (CPU: jnp reference path;
+the same harness drives the Pallas kernels on real TPU).
+
+Covers the framework-side table of the reproduction: translation cost per
+decode step for flat (NDPage) vs radix (2-level) block tables vs dense
+(no-translation ideal), plus engine throughput and simulator throughput.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import block_table as BT
+
+
+def _time(fn, *args, iters=20, warmup=3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_translation() -> List[Tuple[str, float, str]]:
+    """Table-translate cost: ONE gather (flat) vs TWO dependent gathers
+    (radix) at serving scale — the kernel-visible half of NDPage."""
+    rows = []
+    for b, maxp in ((64, 512), (256, 512), (64, 8192)):
+        flat = jnp.asarray(
+            np.random.default_rng(0).permutation(b * maxp)
+            .reshape(b, maxp).astype(np.int32))
+        radix = BT.radix_from_flat(flat, leaf_size=16)
+        f = jax.jit(lambda t: BT.translate_all(t, BT.FLAT))
+        r = jax.jit(lambda t: BT.translate_all(t, BT.RADIX))
+        tf = _time(f, flat)
+        tr = _time(r, radix)
+        rows.append((f"translate_flat_b{b}_p{maxp}", tf,
+                     f"radix={tr:.1f}us ratio={tr / tf:.2f}x"))
+    return rows
+
+
+def bench_paged_attention() -> List[Tuple[str, float, str]]:
+    from repro.kernels import ref
+    rows = []
+    for b, h, kh, d, page, maxp in ((8, 16, 8, 64, 16, 32),
+                                    (16, 16, 8, 64, 16, 64)):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        n = b * maxp + 1
+        q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+        kp = jax.random.normal(ks[1], (n, page, kh, d), jnp.float32)
+        vp = jax.random.normal(ks[2], (n, page, kh, d), jnp.float32)
+        tab = jnp.asarray(np.random.default_rng(0).permutation(n - 1)[
+            : b * maxp].reshape(b, maxp).astype(np.int32))
+        lens = jnp.full((b,), page * maxp - 3, jnp.int32)
+        fn = jax.jit(lambda *a: ref.paged_attention_ref(*a))
+        us = _time(fn, q, kp, vp, tab, lens)
+        toks = b * page * maxp
+        rows.append((f"paged_attn_b{b}_kv{page * maxp}", us,
+                     f"{toks / us:.1f} kv-tokens/us (jnp ref path)"))
+    return rows
+
+
+def bench_flash_attention() -> List[Tuple[str, float, str]]:
+    from repro.models.attention import blockwise_attention
+    rows = []
+    for b, s, h, kh, d in ((2, 2048, 8, 4, 64),):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kh, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32)
+        fn = jax.jit(lambda q, k, v: blockwise_attention(
+            q, k, v, causal=True, q_chunk=512, kv_chunk=512))
+        us = _time(fn, q, k, v, iters=5)
+        flops = 4 * b * h * s * s * d / 2
+        rows.append((f"blockwise_attn_s{s}", us,
+                     f"{flops / us / 1e6:.2f} GFLOP/s (cpu jnp)"))
+    return rows
+
+
+def bench_serve_engine() -> List[Tuple[str, float, str]]:
+    import dataclasses
+    from repro.config import get_arch, smoke_variant
+    from repro.models import init_params
+    from repro.serving import Request, ServeEngine
+
+    cfg = dataclasses.replace(smoke_variant(get_arch("internlm2-1.8b")),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rows = []
+    for mode in (BT.FLAT, BT.RADIX):
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=64, page_size=8,
+                          table_mode=mode)
+        rng = np.random.default_rng(0)
+        for i in range(8):
+            eng.submit(Request(req_id=i,
+                               prompt=rng.integers(1, 200, 6)
+                               .astype(np.int32),
+                               max_new_tokens=8))
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in done)
+        rows.append((f"serve_engine_{mode}", dt / max(toks, 1) * 1e6,
+                     f"{toks} tokens, tcache_hit={eng.sched.tcache.hit_rate:.2f}"))
+    return rows
+
+
+def bench_simulator() -> List[Tuple[str, float, str]]:
+    from repro.configs.ndp_sim import ndp_machine
+    from repro.sim import simulate
+    from repro.workloads import generate_trace
+    tr = generate_trace("rnd", 4, 4000)
+    t0 = time.perf_counter()
+    simulate(ndp_machine(4), tr)          # includes compile
+    t1 = time.perf_counter()
+    simulate(ndp_machine(4), generate_trace("rnd", 4, 4000, seed=1))
+    t2 = time.perf_counter()
+    return [("simulator_4c_4k_accesses", (t2 - t1) * 1e6,
+             f"compile+run={t1 - t0:.1f}s; steady {4000 * 4 * 5 / (t2 - t1):.0f} "
+             "access-mech-sims/s")]
+
+
+def run_all() -> List[Tuple[str, float, str]]:
+    rows = []
+    for fn in (bench_translation, bench_paged_attention,
+               bench_flash_attention, bench_serve_engine, bench_simulator):
+        rows.extend(fn())
+    return rows

@@ -1,0 +1,48 @@
+"""Benchmark driver: one section per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV and writes bench_results.json.
+Sections:
+  * Figs 4-8:   address-translation characterization (NDP vs CPU)
+  * Figs 12-14: end-to-end speedups of ECH / HugePage / NDPage / Ideal
+  * kernels:    serving-layer microbenches (translation, paged attention,
+                blockwise attention, engine throughput, simulator speed)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, sim_figures
+
+    rows = []
+    print("name,us_per_call,derived")
+    sys.stdout.flush()
+
+    fig_rows, summary = sim_figures.run_all()
+    for name, us, derived in fig_rows:
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+    rows.extend(fig_rows)
+
+    for name, us, derived in kernel_bench.run_all():
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+        rows.append((name, us, derived))
+
+    out = {
+        "rows": [{"name": n, "us_per_call": u, "derived": d}
+                 for n, u, d in rows],
+        "speedup_summary": summary,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "bench_results.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {os.path.abspath(path)}")
+
+
+if __name__ == "__main__":
+    main()

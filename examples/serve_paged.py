@@ -1,0 +1,63 @@
+"""Serve a small model with batched requests over the paged KV cache.
+
+Demonstrates the NDPage serving path end-to-end: continuous batching, page
+allocation, occupancy-driven table flattening, and the translation cache.
+
+Usage:
+  PYTHONPATH=src python examples/serve_paged.py [--arch gemma3-1b]
+      [--requests 12] [--table-mode auto|paged_flat|paged_radix]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.config import get_arch, smoke_variant
+from repro.models import init_params
+from repro.serving import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--table-mode", default="auto",
+                    choices=["auto", "paged_flat", "paged_radix"])
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(smoke_variant(get_arch(args.arch)),
+                              dtype="float32")
+    print(f"arch={args.arch} (reduced config), vocab={cfg.vocab_size}")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    mode = None if args.table_mode == "auto" else args.table_mode
+    eng = ServeEngine(cfg, params, max_batch=args.max_batch, max_len=96,
+                      page_size=8, table_mode=mode)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab_size,
+                              rng.integers(4, 12)).astype(np.int32)
+        eng.submit(Request(req_id=i, prompt=prompt,
+                           max_new_tokens=args.new_tokens))
+    done = eng.run()
+    dt = time.time() - t0
+
+    toks = sum(len(r.generated) for r in done)
+    print(f"completed {len(done)} requests / {toks} tokens "
+          f"in {dt:.1f}s ({toks / dt:.1f} tok/s on CPU smoke model)")
+    print(f"scheduler: {eng.sched.stats}")
+    print(f"kv manager: {eng.kvm.stats}, occupancy now "
+          f"{eng.kvm.occupancy():.2f}")
+    print(f"translation cache hit rate: {eng.sched.tcache.hit_rate:.2%}")
+    for r in done[:3]:
+        print(f"  req {r.req_id}: prompt={r.prompt.tolist()} -> "
+              f"{r.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Reproduce the paper's evaluation on a chosen workload set.
+
+Runs the five address-translation mechanisms on NDP machines at 1/4/8 cores
+and prints the Fig-12/13/14 speedup table plus the Fig-4/5 characterization.
+
+Usage:
+  PYTHONPATH=src python examples/sim_ndpage.py [--workloads rnd,bfs,dlrm]
+      [--cores 1,4] [--trace-len 8000]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.ndp_sim import WORKLOADS, cpu_machine, ndp_machine
+from repro.sim import simulate
+from repro.workloads import generate_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workloads", default="rnd,bfs,dlrm")
+    ap.add_argument("--cores", default="1,4")
+    ap.add_argument("--trace-len", type=int, default=6000)
+    args = ap.parse_args()
+    names = [w for w in args.workloads.split(",") if w in WORKLOADS]
+    cores = [int(c) for c in args.cores.split(",")]
+
+    for c in cores:
+        print(f"\n=== {c}-core NDP system ===")
+        print(f"{'workload':8s} {'ech':>7s} {'huge':>7s} {'ndpage':>7s} "
+              f"{'ideal':>7s} {'PTW(radix)':>11s} {'overhead':>9s}")
+        acc = {m: [] for m in ("ech", "hugepage", "ndpage", "ideal")}
+        for w in names:
+            r = simulate(ndp_machine(c), generate_trace(w, c,
+                                                        args.trace_len))
+            sp = r.speedup_vs()
+            for m in acc:
+                acc[m].append(sp[m])
+            print(f"{w:8s} {sp['ech']:7.3f} {sp['hugepage']:7.3f} "
+                  f"{sp['ndpage']:7.3f} {sp['ideal']:7.3f} "
+                  f"{r.avg_ptw_latency()[0]:11.1f} "
+                  f"{r.translation_fraction()[0]:9.3f}")
+        print(f"{'mean':8s} " + " ".join(
+            f"{np.mean(acc[m]):7.3f}" for m in acc))
+
+    print("\n=== NDP vs CPU (4-core, first workload) ===")
+    w = names[0]
+    nd = simulate(ndp_machine(4), generate_trace(w, 4, args.trace_len))
+    cp = simulate(cpu_machine(4), generate_trace(w, 4, args.trace_len))
+    print(f"PTW latency : NDP={nd.avg_ptw_latency()[0]:.1f}cyc "
+          f"CPU={cp.avg_ptw_latency()[0]:.1f}cyc")
+    print(f"translation : NDP={nd.translation_fraction()[0]:.3f} "
+          f"CPU={cp.translation_fraction()[0]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Architecture config registry — one module per assigned architecture.
+
+Importing this package registers all architectures with repro.config.
+"""
+from repro.configs import (  # noqa: F401
+    granite_moe_1b_a400m,
+    deepseek_v2_236b,
+    gemma3_1b,
+    granite_34b,
+    internlm2_1_8b,
+    phi3_medium_14b,
+    whisper_tiny,
+    jamba_1_5_large_398b,
+    internvl2_76b,
+    rwkv6_3b,
+    ndp_sim,
+)

@@ -1,0 +1,103 @@
+"""The paper's own configuration: Table I machine configs + Table II workloads.
+
+This is not an LM architecture; it parameterizes the NDPage reproduction
+simulator (repro.sim).  All latencies are in core cycles at 2.6 GHz, matching
+Table I of the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class CacheParams:
+    size_bytes: int
+    ways: int
+    latency: int                # cycles
+    line_bytes: int = 64
+
+    @property
+    def num_sets(self) -> int:
+        return self.size_bytes // (self.ways * self.line_bytes)
+
+
+@dataclass(frozen=True)
+class TLBParams:
+    entries: int
+    ways: int
+    latency: int
+
+
+@dataclass(frozen=True)
+class MachineConfig:
+    """One simulated machine (CPU or NDP), per Table I."""
+
+    name: str
+    is_ndp: bool
+    num_cores: int
+    freq_ghz: float = 2.6
+    # cache hierarchy: NDP has ONLY L1; CPU has L1+L2+L3.
+    l1d: CacheParams = field(default_factory=lambda: CacheParams(32 * 1024, 8, 4))
+    l2: CacheParams | None = None
+    l3: CacheParams | None = None
+    # MMU
+    l1_dtlb: TLBParams = field(default_factory=lambda: TLBParams(64, 4, 1))
+    l2_tlb: TLBParams = field(default_factory=lambda: TLBParams(1536, 12, 12))
+    # page-walk caches: one per upper level, near-ideal for L4/L3 (paper VI)
+    pwc_entries: int = 32
+    pwc_latency: int = 2
+    # memory: DDR4-2400 (CPU) vs HBM2 (NDP).  Latencies in core cycles;
+    # HBM2 row access is slightly slower than DDR4 but the NDP core sits in
+    # the logic layer -> much lower interconnect cost and higher bandwidth.
+    mem_latency: int = 170          # DDR4 ~65ns @2.6GHz
+    mem_bandwidth_gbs: float = 19.2
+    # effective random-access service time per 64B line (bank-limited),
+    # drives the queueing model
+    mem_service: float = 14.0
+    interconnect_hop: int = 4       # mesh hop latency, cycles
+    interconnect_hops_to_mem: int = 8
+
+
+def cpu_machine(cores: int) -> MachineConfig:
+    return MachineConfig(
+        name=f"cpu-{cores}c", is_ndp=False, num_cores=cores,
+        l2=CacheParams(512 * 1024, 16, 16),
+        # Table I: 2MB/core — modelled as a private 2MB slice per core
+        l3=CacheParams(2 * 1024 * 1024, 16, 35),
+        mem_latency=170, mem_bandwidth_gbs=19.2, mem_service=12.0,
+        interconnect_hops_to_mem=8,
+    )
+
+
+def ndp_machine(cores: int) -> MachineConfig:
+    return MachineConfig(
+        name=f"ndp-{cores}c", is_ndp=True, num_cores=cores,
+        l2=None, l3=None,
+        # NDP core in the logic layer: short path to the stacked DRAM
+        mem_latency=100, mem_bandwidth_gbs=307.2,   # HBM2 4-stack
+        # irregular single-line accesses are row-miss/bank-limited, not
+        # peak-BW-limited: tRC(~45ns=117cyc)/active-banks + ctrl overhead
+        mem_service=46.0,
+        interconnect_hops_to_mem=1,
+    )
+
+
+# Table II — workload trace parameters.  footprint_bytes reproduces the
+# dataset sizes; pattern keys map to generators in repro.workloads.
+WORKLOADS: Dict[str, dict] = {
+    "bc":   dict(suite="GraphBIG", pattern="graph", footprint_gb=8,  alpha=2.1),
+    "bfs":  dict(suite="GraphBIG", pattern="graph_frontier", footprint_gb=8, alpha=2.1),
+    "cc":   dict(suite="GraphBIG", pattern="graph", footprint_gb=8,  alpha=2.3),
+    "gc":   dict(suite="GraphBIG", pattern="graph", footprint_gb=8,  alpha=2.2),
+    "pr":   dict(suite="GraphBIG", pattern="graph_sweep", footprint_gb=8, alpha=2.1),
+    "tc":   dict(suite="GraphBIG", pattern="graph", footprint_gb=8,  alpha=1.9),
+    "sp":   dict(suite="GraphBIG", pattern="graph_frontier", footprint_gb=8, alpha=2.0),
+    "xs":   dict(suite="XSBench",  pattern="mc_lookup", footprint_gb=9),
+    "rnd":  dict(suite="GUPS",     pattern="uniform", footprint_gb=10),
+    "dlrm": dict(suite="DLRM",     pattern="embedding_bag", footprint_gb=10),
+    "gen":  dict(suite="GenomicsBench", pattern="kmer", footprint_gb=33),
+}
+
+CORE_COUNTS: Tuple[int, ...] = (1, 4, 8)
+MECHANISMS: Tuple[str, ...] = ("radix", "ech", "hugepage", "ndpage", "ideal")

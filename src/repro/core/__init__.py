@@ -1,0 +1,13 @@
+"""NDPage core: the paper's contribution.
+
+Two faces of the same idea:
+  * ``page_table``: functional models of x86-style page-table walks
+    (radix-4, NDPage flattened L2/L1, huge-page, elastic-cuckoo) that the
+    architectural simulator (repro.sim) replays for the faithful
+    reproduction.
+  * ``block_table`` / ``kv_page_manager``: the serving-side translation
+    layer — logical KV positions -> physical KV pages — where the NDPage
+    mechanisms (flattened table, metadata bypass via scalar prefetch) are a
+    first-class feature of the TPU framework.
+"""
+from repro.core import block_table, kv_page_manager, page_table  # noqa: F401

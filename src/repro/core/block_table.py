@@ -1,0 +1,115 @@
+"""Serving-side translation tables: logical KV page -> physical KV page.
+
+Two organizations, mirroring the paper:
+
+  * radix (2-level): per-sequence directory -> shared leaf tables -> physical
+    page.  Lookup = TWO dependent gathers (the deep-tree baseline).
+  * flat (NDPage): one per-sequence table -> physical page.  Lookup = ONE
+    gather.  This is the paper's flattened L2/L1 node: decode sequences fill
+    their logical pages densely (Observation B holds — occupancy ~1), so the
+    directory level buys no space worth its extra indirection.
+
+``flatten_radix`` is the NDPage merge operation; ``kv_page_manager`` decides
+when to apply it from measured occupancy.
+
+All tables are int32 device arrays; host-side allocation lives in
+kv_page_manager.PagePool (allocation never happens inside jit — the
+scheduler allocates between steps, exactly like the OS allocates PT nodes
+outside the walk).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+FLAT = "paged_flat"
+RADIX = "paged_radix"
+
+
+@dataclass
+class RadixTable:
+    """directory: (B, n_dir) int32 leaf-table ids (-1 = unallocated)
+    leaves: (n_leaf_tables, leaf_size) int32 physical page ids (-1 = hole)."""
+    directory: jnp.ndarray
+    leaves: jnp.ndarray
+
+    @property
+    def leaf_size(self) -> int:
+        return self.leaves.shape[1]
+
+    def tree_flatten(self):
+        return (self.directory, self.leaves), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    RadixTable, RadixTable.tree_flatten, RadixTable.tree_unflatten)
+
+
+def translate_all(table, mode: str) -> jnp.ndarray:
+    """Full logical->physical map for every sequence: (B, max_pages) int32.
+
+    flat:  zero extra indirections (the table IS the map).
+    radix: one extra dependent gather through the directory.
+    """
+    if mode == FLAT:
+        return table
+    if mode == RADIX:
+        # gather leaves for each directory entry: (B, n_dir, leaf_size)
+        dir_ = jnp.maximum(table.directory, 0)
+        gathered = table.leaves[dir_]
+        valid = (table.directory >= 0)[..., None]
+        gathered = jnp.where(valid, gathered, -1)
+        b, n_dir, ls = gathered.shape
+        return gathered.reshape(b, n_dir * ls)
+    raise ValueError(mode)
+
+
+def translate_one(table, seq_idx: jnp.ndarray, logical_page: jnp.ndarray,
+                  mode: str) -> jnp.ndarray:
+    """Physical page for (seq, logical_page); both (B,) arrays."""
+    if mode == FLAT:
+        return table[seq_idx, logical_page]
+    if mode == RADIX:
+        ls = table.leaf_size
+        leaf_id = table.directory[seq_idx, logical_page // ls]
+        return table.leaves[jnp.maximum(leaf_id, 0), logical_page % ls]
+    raise ValueError(mode)
+
+
+def flatten_radix(table: RadixTable) -> jnp.ndarray:
+    """The NDPage merge: collapse directory+leaves into one flat table."""
+    return translate_all(table, RADIX)
+
+
+def radix_from_flat(flat: jnp.ndarray, leaf_size: int) -> RadixTable:
+    """Build the 2-level organization of an existing mapping (baseline)."""
+    b, maxp = flat.shape
+    assert maxp % leaf_size == 0, (maxp, leaf_size)
+    n_dir = maxp // leaf_size
+    leaves = flat.reshape(b * n_dir, leaf_size)
+    directory = jnp.arange(b * n_dir, dtype=jnp.int32).reshape(b, n_dir)
+    # unallocated directories (all-hole leaves) marked -1
+    empty = (leaves < 0).all(axis=1).reshape(b, n_dir)
+    directory = jnp.where(empty, -1, directory)
+    return RadixTable(directory=directory, leaves=leaves)
+
+
+def table_bytes(table, mode: str) -> int:
+    if mode == FLAT:
+        return table.size * 4
+    return table.directory.size * 4 + table.leaves.size * 4
+
+
+def occupancy(flat: jnp.ndarray, lengths: jnp.ndarray, page_size: int
+              ) -> jnp.ndarray:
+    """Fraction of mapped slots actually in use (Observation B metric)."""
+    used_pages = -(-lengths // page_size)            # ceil
+    mapped = (flat >= 0).sum(axis=1)
+    return used_pages / jnp.maximum(mapped, 1)

@@ -1,0 +1,175 @@
+"""Paged KV-cache manager: host-side allocator + jit-side page primitives.
+
+The host allocator (PagePool / KVPageManager) plays the OS role: it owns the
+free list, maps logical pages of live sequences to physical pages, and
+decides the table organization (radix 2-level vs NDPage flat) from measured
+occupancy — the paper's Observation B applied at runtime.  Allocation never
+happens inside jit; decode steps consume a ready table, exactly as a page
+walk consumes OS-built page tables.
+
+jit-side primitives (`append_kv`, `gather_kv`) are the data-path half used
+by models/attention and by the kernels' reference oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import block_table as BT
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator (the "OS")
+# ---------------------------------------------------------------------------
+class PagePool:
+    """Free-list allocator over a fixed pool of physical KV pages."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def allocate(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"KV pool exhausted: want {n}, have {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def release(self, pages: List[int]) -> None:
+        self._free.extend(pages)
+
+
+class KVPageManager:
+    """Logical->physical page mapping for a batch of sequences.
+
+    Mirrors NDPage's design point: it maintains the mapping as a 2-level
+    radix structure (directory of leaf tables) and *flattens* it when the
+    measured leaf occupancy crosses ``flatten_threshold`` — after which
+    decode kernels get the single-indirection flat table.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_seqs: int,
+                 max_len: int, leaf_size: int = 16,
+                 flatten_threshold: float = 0.5):
+        self.pool = PagePool(num_pages)
+        self.page_size = page_size
+        self.max_seqs = max_seqs
+        self.max_pages = -(-max_len // page_size)
+        self.leaf_size = leaf_size
+        self.flatten_threshold = flatten_threshold
+        # host mapping: per-seq list of physical pages
+        self.pages: Dict[int, List[int]] = {}
+        self.lengths: Dict[int, int] = {}
+        # translation stats (the serving analogue of PTW counters)
+        self.stats = {"allocated_pages": 0, "freed_pages": 0,
+                      "flattens": 0, "table_rebuilds": 0}
+
+    # -- sequence lifecycle -------------------------------------------------
+    def add_sequence(self, seq_id: int, prompt_len: int) -> None:
+        n = -(-max(prompt_len, 1) // self.page_size)
+        self.pages[seq_id] = self.pool.allocate(n)
+        self.lengths[seq_id] = prompt_len
+        self.stats["allocated_pages"] += n
+
+    def append_token(self, seq_id: int) -> None:
+        """Grow mapping by one token; allocate a page on boundary cross."""
+        self.lengths[seq_id] += 1
+        need = -(-self.lengths[seq_id] // self.page_size)
+        have = len(self.pages[seq_id])
+        if need > have:
+            self.pages[seq_id].extend(self.pool.allocate(need - have))
+            self.stats["allocated_pages"] += need - have
+
+    def free_sequence(self, seq_id: int) -> None:
+        pages = self.pages.pop(seq_id)
+        self.pool.release(pages)
+        self.stats["freed_pages"] += len(pages)
+        del self.lengths[seq_id]
+
+    # -- occupancy & table organization (the NDPage decision) ---------------
+    def occupancy(self) -> float:
+        """Used slots / mapped slots across live sequences."""
+        used = sum(self.lengths.values())
+        mapped = sum(len(p) for p in self.pages.values()) * self.page_size
+        return used / mapped if mapped else 0.0
+
+    def preferred_mode(self) -> str:
+        return (BT.FLAT if self.occupancy() >= self.flatten_threshold
+                else BT.RADIX)
+
+    # -- device-table construction -------------------------------------------
+    def flat_table(self, seq_ids: List[int]) -> jnp.ndarray:
+        """(B, max_pages) int32; -1 where unmapped."""
+        self.stats["table_rebuilds"] += 1
+        tab = np.full((len(seq_ids), self.max_pages), -1, np.int32)
+        for i, sid in enumerate(seq_ids):
+            p = self.pages[sid]
+            tab[i, : len(p)] = p
+        return jnp.asarray(tab)
+
+    def radix_table(self, seq_ids: List[int]) -> BT.RadixTable:
+        flat = self.flat_table(seq_ids)
+        return BT.radix_from_flat(flat, min(self.leaf_size, self.max_pages))
+
+    def build_table(self, seq_ids: List[int], mode: Optional[str] = None):
+        mode = mode or self.preferred_mode()
+        if mode == BT.FLAT:
+            self.stats["flattens"] += 1
+            return self.flat_table(seq_ids), BT.FLAT
+        return self.radix_table(seq_ids), BT.RADIX
+
+    def lengths_array(self, seq_ids: List[int]) -> jnp.ndarray:
+        return jnp.asarray([self.lengths[s] for s in seq_ids], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# jit-side page primitives (data path)
+# ---------------------------------------------------------------------------
+def append_kv(kp: jnp.ndarray, vp: jnp.ndarray, k_new: jnp.ndarray,
+              v_new: jnp.ndarray, phys_page: jnp.ndarray,
+              slot: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter one new token's K/V into the pools.
+
+    kp/vp: (N, page, K, H); k_new/v_new: (B, K, H); phys_page, slot: (B,).
+    """
+    kp = kp.at[phys_page, slot].set(k_new)
+    vp = vp.at[phys_page, slot].set(v_new)
+    return kp, vp
+
+
+def gather_kv(kp: jnp.ndarray, vp: jnp.ndarray, phys: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize per-sequence KV from pools (the XLA reference path).
+
+    phys: (B, max_pages) -> (B, max_pages*page, K, H).
+    On real TPU the Pallas kernel replaces this (pages stream HBM->VMEM
+    block-by-block; the table itself rides the scalar-prefetch path).
+    """
+    safe = jnp.maximum(phys, 0)
+    b, mp = phys.shape
+    n, pg, kh, hd = kp.shape
+    ks = kp[safe].reshape(b, mp * pg, kh, hd)
+    vs = vp[safe].reshape(b, mp * pg, kh, hd)
+    return ks, vs
+
+
+def prefill_into_pages(kp, vp, k_seq, v_seq, phys: jnp.ndarray):
+    """Write a prefilled (B, S, K, H) K/V into pools. S % page == 0 assumed
+    (caller pads); phys: (B, n_pages_used)."""
+    b, s, kh, hd = k_seq.shape
+    pg = kp.shape[1]
+    npg = s // pg
+    kr = k_seq.reshape(b, npg, pg, kh, hd)
+    vr = v_seq.reshape(b, npg, pg, kh, hd)
+    idx = jnp.maximum(phys[:, :npg], 0)
+    kp = kp.at[idx].set(kr)
+    vp = vp.at[idx].set(vr)
+    return kp, vp

@@ -1,0 +1,131 @@
+"""Functional page-table models: the PTE access streams of each mechanism.
+
+The simulator replays virtual-page-number (VPN) traces; each mechanism maps
+a VPN to the *sequence of PTE cache-line addresses* a hardware page walk
+would touch.  Addresses are synthetic-physical **64B-line ids** (int32,
+inside a dedicated page-table region above ``PT_REGION_LINE``) but preserve
+exactly the locality structure that drives cache/TLB behaviour:
+
+  radix-4     4 sequential accesses; PTEs of adjacent VPNs share cache lines
+              (8 x 8B PTEs / 64B line); node placement is a hash of the VPN
+              prefix (nodes are 4KB-scattered in physical memory).
+  ndpage      3 sequential accesses; levels L2/L1 merged into one 2MB node
+              indexed by the low 18 VPN bits (the paper's flattened table).
+  hugepage    3 sequential accesses (2MB pages, no PL1); TLB entries span
+              2MB of VA.
+  ech         3 *parallel* cuckoo-hash probes (Elastic Cuckoo Hash Table);
+              latency is max(), not sum() — modelled by the MMU.
+  ideal       no PTE accesses at all.
+
+All functions are vectorized over the trace axis and jit-friendly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PTE_BYTES = 8
+LINE_BYTES = 64
+PTES_PER_LINE = LINE_BYTES // PTE_BYTES          # 8
+ENTRIES = 512                                    # per 4KB radix node
+NODE_LINES = ENTRIES // PTES_PER_LINE            # 64 lines per 4KB node
+FLAT_LINES = (1 << 18) // PTES_PER_LINE          # 32768 lines per 2MB node
+PT_REGION_LINE = 1 << 28                         # PT region starts here
+
+# VPN bit slices (48-bit VA, 4KB pages -> 36-bit VPN; traces use <= 2^22)
+#   L1 idx: bits 0..8 | L2: 9..17 | L3: 18..26 | L4: 27..35
+_SHIFTS = (27, 18, 9, 0)                         # L4, L3, L2, L1
+
+
+def _mix(x: jnp.ndarray, salt: int) -> jnp.ndarray:
+    """Cheap deterministic integer hash (Wang-style), uint32."""
+    x = x.astype(jnp.uint32) ^ jnp.uint32(salt)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _node_base_line(node_key: jnp.ndarray, salt: int) -> jnp.ndarray:
+    """Pseudo-random 4KB-aligned node placement: line id of node start."""
+    h = _mix(node_key, salt)
+    # 2^20 possible node frames (4GB of PT space), 64 lines each
+    return ((h & jnp.uint32(0xFFFFF)).astype(jnp.int32)) * NODE_LINES
+
+
+def _level_line(vpn: jnp.ndarray, shift: int, salt: int) -> jnp.ndarray:
+    idx = (vpn >> shift) & (ENTRIES - 1)
+    prefix = (vpn >> (shift + 9)).astype(jnp.int32)
+    base = _node_base_line(prefix, salt)
+    return PT_REGION_LINE + base + (idx // PTES_PER_LINE).astype(jnp.int32)
+
+
+def radix4_walk_lines(vpn: jnp.ndarray) -> jnp.ndarray:
+    """PTE line ids for a 4-level walk. vpn: (T,) int32 -> (T, 4)."""
+    return jnp.stack([_level_line(vpn, sh, 0xA0 + i)
+                      for i, sh in enumerate(_SHIFTS)], axis=-1)
+
+
+def ndpage_walk_lines(vpn: jnp.ndarray) -> jnp.ndarray:
+    """NDPage: L4, L3, then ONE flattened L2/L1 access. (T,) -> (T, 3)."""
+    out = [_level_line(vpn, sh, 0xA0 + i) for i, sh in enumerate(_SHIFTS[:2])]
+    idx18 = (vpn & ((1 << 18) - 1)).astype(jnp.int32)
+    prefix = (vpn >> 18).astype(jnp.int32)
+    h = _mix(prefix, 0xF1)
+    base = ((h & jnp.uint32(0x3F)).astype(jnp.int32)) * FLAT_LINES
+    out.append(PT_REGION_LINE + base + idx18 // PTES_PER_LINE)
+    return jnp.stack(out, axis=-1)
+
+
+def hugepage_walk_lines(vpn: jnp.ndarray) -> jnp.ndarray:
+    """2MB pages: PL4, PL3, PL2 only. (T,) -> (T, 3)."""
+    return jnp.stack([_level_line(vpn, sh, 0xB0 + i)
+                      for i, sh in enumerate(_SHIFTS[:3])], axis=-1)
+
+
+def ech_probe_lines(vpn: jnp.ndarray, num_ways: int = 2) -> jnp.ndarray:
+    """Elastic cuckoo hashing: d independent hashed probes. (T,) -> (T, d)."""
+    outs = []
+    for w in range(num_ways):
+        h = _mix(vpn.astype(jnp.uint32), salt=0xC0 + w)
+        # each way is a large hash table: 2^24 line-granular buckets
+        line = (h & jnp.uint32(0x00FFFFFF)).astype(jnp.int32)
+        outs.append(PT_REGION_LINE + (1 << 24) * (w + 1) + line)
+    return jnp.stack(outs, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# occupancy analysis (paper Fig. 8): computed from the VPN working set
+# ---------------------------------------------------------------------------
+def occupancy_by_level(vpns: np.ndarray) -> Tuple[float, float, float, float]:
+    """(PL4, PL3, PL2, PL1) occupancy of a workload's touched VPN set.
+
+    Occupancy of level k = touched entries / (ENTRIES * touched nodes):
+    exactly the paper's metric — how full the allocated tables are.
+    """
+    vpns = np.unique(np.asarray(vpns, dtype=np.int64))
+    occs = []
+    for sh in _SHIFTS:
+        entries = np.unique(vpns >> sh)            # distinct entries touched
+        tables = np.unique(vpns >> (sh + 9))       # distinct nodes touched
+        occs.append(len(entries) / (ENTRIES * max(len(tables), 1)))
+    return tuple(occs)  # type: ignore[return-value]
+
+
+def flattened_occupancy(vpns: np.ndarray) -> float:
+    """Occupancy of the merged L2/L1 node (2^18 entries)."""
+    vpns = np.unique(np.asarray(vpns, dtype=np.int64))
+    entries = np.unique(vpns)                      # each vpn = one entry
+    tables = np.unique(vpns >> 18)
+    return len(entries) / ((1 << 18) * max(len(tables), 1))
+
+
+WALKS = {
+    "radix": radix4_walk_lines,
+    "ndpage": ndpage_walk_lines,
+    "hugepage": hugepage_walk_lines,
+    "ech": ech_probe_lines,
+}

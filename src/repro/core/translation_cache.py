@@ -1,0 +1,53 @@
+"""Software translation cache for the serving scheduler (the PWC analogue).
+
+NDPage keeps page-walk caches for the two upper levels (hit rates ~100% /
+98.6%) while the flattened bottom level goes straight to memory.  In the
+serving runtime the analogous hot metadata is the *directory row* of a
+sequence (radix mode) or the flat-table row (flat mode): the scheduler
+resolves logical->physical pages on the host when building kernel operands,
+and this LRU cache avoids re-deriving rows for sequences whose mapping did
+not change between steps (prefix-shared and continuing sequences).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable, Optional, Tuple
+
+import numpy as np
+
+
+class TranslationCache:
+    """LRU cache over (seq_id, version) -> np.ndarray physical-page rows."""
+
+    def __init__(self, capacity: int = 1024):
+        self.capacity = capacity
+        self._store: "OrderedDict[Tuple[Hashable, int], np.ndarray]" = (
+            OrderedDict())
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, seq_id: Hashable, version: int) -> Optional[np.ndarray]:
+        key = (seq_id, version)
+        row = self._store.get(key)
+        if row is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return row
+
+    def insert(self, seq_id: Hashable, version: int, row: np.ndarray) -> None:
+        key = (seq_id, version)
+        self._store[key] = row
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
+    def invalidate(self, seq_id: Hashable) -> None:
+        for key in [k for k in self._store if k[0] == seq_id]:
+            del self._store[key]
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

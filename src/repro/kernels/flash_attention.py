@@ -1,0 +1,116 @@
+"""Pallas TPU flash-attention kernel (training/prefill, causal + window).
+
+Blockwise online-softmax attention with GQA head grouping.  Layout:
+  q: (B, H, S, D), k/v: (B, KH, S, D)  (wrapper-normalized)
+Grid: (B, H, NQ, NK) — NK innermost so the (m, l, acc) scratch carries one
+query block's state across KV blocks.
+
+VMEM working set per step = bq*D + 2*bk*D + bq*bk scores; block sizes are
+chosen so this sits well under v5e VMEM (~128KB at bq=bk=512, D=128, bf16
+inputs with f32 scores/accumulators ~ 1.5MB total) and the MXU sees
+(bq x D) @ (D x bk) matmuls with 128-aligned dims.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, causal: bool, window: int, scale: float):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                   # (bq, D)
+    k = k_ref[0, 0]                                   # (bk, D)
+    v = v_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = jnp.ones((bq, bk), bool)
+    if causal:
+        valid &= kpos <= qpos
+    if window > 0:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, window: int = 0,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, S, H, D); k/v: (B, S, KH, D) -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq, nk = s // bq, s // bk
+    scale = 1.0 / math.sqrt(d)
+
+    qt = q.transpose(0, 2, 1, 3)                      # (B, H, S, D)
+    kt = k.transpose(0, 2, 1, 3)                      # (B, KH, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    def q_map(bi, hi, qi, ki):
+        return (bi, hi, qi, 0)
+
+    def kv_map(bi, hi, qi, ki):
+        return (bi, hi // g, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal,
+                          window=window, scale=scale),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), q_map),
+            pl.BlockSpec((1, 1, bk, d), kv_map),
+            pl.BlockSpec((1, 1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,58 @@
+"""jit'd public wrappers for the Pallas kernels with pure-jnp fallbacks.
+
+Dispatch policy:
+  * on TPU: compiled Pallas kernels
+  * REPRO_KERNEL_IMPL=interpret: Pallas in interpret mode (CPU validation)
+  * otherwise (this CPU container): the jnp reference oracles
+
+so models/ and serving/ call one API regardless of backend.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+
+
+def _impl(override: Optional[str]) -> str:
+    if override:
+        return override
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    try:
+        platform = jax.devices()[0].platform
+    except Exception:  # pragma: no cover - device init failure
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "ref"
+
+
+def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                    v_pages: jnp.ndarray, block_table: jnp.ndarray,
+                    valid_lens: jnp.ndarray, *, window: int = 0,
+                    impl: Optional[str] = None) -> jnp.ndarray:
+    """Decode attention over paged KV (see kernels/paged_attention.py)."""
+    which = _impl(impl)
+    if which == "ref":
+        return ref.paged_attention_ref(q, k_pages, v_pages, block_table,
+                                       valid_lens, window=window)
+    return paged_attention_pallas(q, k_pages, v_pages, block_table,
+                                  valid_lens, window=window,
+                                  interpret=(which == "interpret"))
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True, window: int = 0,
+                    impl: Optional[str] = None) -> jnp.ndarray:
+    """Blockwise attention (see kernels/flash_attention.py)."""
+    which = _impl(impl)
+    if which == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=(which == "interpret"))

@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: device count locks on first use.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell.
+
+For each runnable cell (see repro.config.cells_for) this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct inputs (launch.specs — no allocation),
+  3. jit-lowers train_step or serve_step with full in/out shardings,
+  4. compiles, printing memory_analysis() and cost_analysis(),
+  5. parses collective bytes out of the optimized HLO,
+  6. appends everything to a JSON results file (incremental cache:
+     finished cells are skipped on re-run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-medium-14b \
+      --shape train_4k [--multi-pod] [--all] [--out dryrun_results.json]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import config as C
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as SP
+from repro.models import decode_step, init_decode_state
+from repro.parallel import sharding as SH
+from repro.roofline.hlo_stats import (collective_bytes, count_collectives,
+                                      dot_flops)
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_loop import make_train_step, TrainState
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "dryrun_results.json")
+
+# per-(arch, shape) microbatch counts: keep per-microbatch logits bounded
+MICROBATCH = {
+    "train_4k": 16,
+}
+
+
+def _microbatches(cfg: C.ArchConfig, shape: C.ShapeConfig) -> int:
+    if shape.kind != "train":
+        return 1
+    n = MICROBATCH.get(shape.name, 1)
+    return min(n, shape.global_batch)
+
+
+def lower_train(cfg: C.ArchConfig, shape: C.ShapeConfig, mesh):
+    batch_specs = SP.train_input_specs(cfg, shape)
+    params = SP.param_specs(cfg)
+    p_shard = SH.param_sharding(params, mesh, cfg)
+    opt_specs = jax.eval_shape(adamw_init, params)
+    o_shard = {
+        "mu": p_shard, "nu": p_shard,
+        "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+    }
+    rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    rep = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    state_specs = TrainState(params=params, opt=opt_specs, rng=rng_spec)
+    state_shard = TrainState(params=p_shard, opt=o_shard, rng=rep)
+
+    batch_axes = SH.batch_axes(mesh)
+    b_shard = {
+        k: jax.NamedSharding(
+            mesh, SH.valid_spec(
+                jax.sharding.PartitionSpec(batch_axes), v.shape, mesh))
+        for k, v in batch_specs.items()
+    }
+
+    step = make_train_step(cfg, AdamWConfig(),
+                           num_microbatches=_microbatches(cfg, shape),
+                           mesh=mesh)
+    jitted = jax.jit(step,
+                     in_shardings=(state_shard, b_shard),
+                     out_shardings=(state_shard, rep),
+                     donate_argnums=(0,))
+    from repro.parallel.context import use_mesh
+    with mesh, use_mesh(mesh):
+        lowered = jitted.lower(state_specs, batch_specs)
+    return lowered
+
+
+def lower_prefill(cfg: C.ArchConfig, shape: C.ShapeConfig, mesh):
+    """Inference prefill: forward pass, last-position logits (KV-fill cost
+    is exercised by the serving path; the transformer forward dominates)."""
+    from repro.models import forward_train
+
+    batch_specs = SP.train_input_specs(cfg, shape)
+    del batch_specs["labels"]
+    params = SP.param_specs(cfg)
+    p_shard = SH.param_sharding(params, mesh, cfg)
+    batch_axes = SH.batch_axes(mesh)
+    b_shard = {
+        k: jax.NamedSharding(
+            mesh, SH.valid_spec(
+                jax.sharding.PartitionSpec(batch_axes), v.shape, mesh))
+        for k, v in batch_specs.items()
+    }
+    rep = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    out_shard = jax.NamedSharding(
+        mesh, SH.valid_spec(jax.sharding.PartitionSpec(batch_axes),
+                            (shape.global_batch, cfg.vocab_size), mesh))
+
+    def prefill_step(params, batch):
+        logits, _ = forward_train(params, cfg, batch)
+        return logits[:, -1]
+
+    jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                     out_shardings=out_shard)
+    from repro.parallel.context import use_mesh
+    with mesh, use_mesh(mesh):
+        lowered = jitted.lower(params, batch_specs)
+    return lowered
+
+
+def lower_serve(cfg: C.ArchConfig, shape: C.ShapeConfig, mesh,
+                kv_mode: str = "paged_flat"):
+    if cfg.attn_free:
+        kv_mode = "dense"
+    params = SP.param_specs(cfg)
+    state = SP.decode_state_specs(cfg, shape, kv_mode)
+    tokens = SP.decode_token_specs(shape)
+
+    # decode params: TP over "model" only — FSDP sharding would re-gather
+    # weights over the data axis every step (perf iteration H6)
+    serve_cfg = dataclasses.replace(cfg, fsdp=False)
+    p_shard = SH.param_sharding(params, mesh, serve_cfg)
+    s_shard = SH.state_sharding(state, mesh, cfg)
+    batch_axes = SH.batch_axes(mesh)
+    t_shard = jax.NamedSharding(
+        mesh, SH.valid_spec(jax.sharding.PartitionSpec(batch_axes),
+                            (shape.global_batch,), mesh))
+    rep = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def serve_step(params, state, tokens):
+        return decode_step(params, cfg, state, tokens, kv_mode=kv_mode)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_shard, s_shard, t_shard),
+                     out_shardings=(rep, s_shard),
+                     donate_argnums=(1,))
+    from repro.parallel.context import use_mesh
+    with mesh, use_mesh(mesh):
+        lowered = jitted.lower(params, state, tokens)
+    return lowered
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             kv_mode: str = "paged_flat") -> Dict[str, Any]:
+    cfg = C.get_arch(arch)
+    shape = C.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered = lower_train(cfg, shape, mesh)
+    elif shape.kind == "prefill":
+        lowered = lower_prefill(cfg, shape, mesh)
+    else:
+        lowered = lower_serve(cfg, shape, mesh, kv_mode)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_coll = count_collectives(hlo)
+    # cost_analysis() visits while bodies ONCE; recover scan-over-layers /
+    # grad-accum multiplicity from the HLO loop structure and scale the
+    # memory estimate by the same factor (homogeneous loop bodies).
+    dots_w, dots_raw = dot_flops(hlo)
+    loop_scale = (dots_w / dots_raw) if dots_raw else 1.0
+    raw_flops = cost.get("flops", 0.0)
+    raw_bytes = cost.get("bytes accessed", 0.0)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "kv_mode": kv_mode if shape.kind == "decode" else None,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": max(dots_w, raw_flops),
+        "bytes_accessed": raw_bytes * loop_scale,
+        "flops_raw_cost_analysis": raw_flops,
+        "bytes_raw_cost_analysis": raw_bytes,
+        "dot_flops_weighted": dots_w,
+        "dot_flops_unweighted": dots_raw,
+        "loop_scale": loop_scale,
+        "per_device_memory_bytes": getattr(
+            mem, "temp_size_in_bytes", 0) + getattr(
+            mem, "argument_size_in_bytes", 0) + getattr(
+            mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "generated_code_bytes": getattr(
+            mem, "generated_code_size_in_bytes", 0),
+        "collective_bytes": coll,
+        "collective_counts": n_coll,
+    }
+    print(f"[dryrun] {arch} x {shape_name} x {result['mesh']}: "
+          f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
+          f"flops={result['flops']:.3e}  "
+          f"hbm/device={result['per_device_memory_bytes']/2**30:.2f}GiB  "
+          f"collectives={coll/2**30:.3f}GiB")
+    return result
+
+
+def load_results(path: str) -> Dict[str, Any]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(path: str, results: Dict[str, Any]) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, path)
+
+
+def cell_key(arch: str, shape: str, multi_pod: bool, kv_mode: str) -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return f"{arch}|{shape}|{mesh}|{kv_mode}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--kv-mode", default="paged_flat")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results = load_results(args.out)
+    cells = []
+    archs = C.list_archs() if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        cfg = C.get_arch(a)
+        shapes = (C.cells_for(cfg) if (args.all or not args.shape)
+                  else [args.shape])
+        for s in shapes:
+            meshes = ([False, True] if (args.both_meshes or args.all)
+                      else [args.multi_pod])
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in cells:
+        key = cell_key(a, s, mp, args.kv_mode)
+        if key in results and not args.force:
+            print(f"[dryrun] skip cached {key}")
+            continue
+        try:
+            results[key] = run_cell(a, s, mp, args.kv_mode)
+            save_results(args.out, results)
+        except Exception as e:
+            failures.append((key, repr(e)))
+            print(f"[dryrun] FAIL {key}: {e}")
+            traceback.print_exc()
+    print(f"[dryrun] done: {len(results)} cells cached, "
+          f"{len(failures)} failures")
+    for k, e in failures:
+        print("  FAILED:", k, e)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

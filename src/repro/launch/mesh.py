@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int = 8):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh((devices // 2, 2), ("data", "model"))

@@ -1,0 +1,57 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers
+train_step / serve_step against these for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import config as C
+from repro.models import init_decode_state, init_params
+from repro.models.model_zoo import DEFAULT_PAGE_SIZE
+
+S = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: C.ArchConfig, shape: C.ShapeConfig
+                      ) -> Dict[str, Any]:
+    """Batch specs for a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    s_tok = s - cfg.vision_tokens
+    batch: Dict[str, Any] = {
+        "tokens": S((b, s_tok), jnp.int32),
+        "labels": S((b, s_tok), jnp.int32),
+    }
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = S((b, cfg.vision_tokens, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+    if cfg.is_encdec:
+        batch["audio_frames"] = S((b, cfg.encoder_seq_len, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    return batch
+
+
+def param_specs(cfg: C.ArchConfig) -> Any:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def decode_state_specs(cfg: C.ArchConfig, shape: C.ShapeConfig,
+                       kv_mode: str = "paged_flat",
+                       page_size: int = DEFAULT_PAGE_SIZE) -> Any:
+    """Decode-state ShapeDtypeStructs for a serve step (cache at seq_len)."""
+    if cfg.attn_free:
+        kv_mode = "dense"   # no KV path at all; state is O(1) recurrent
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                  kv_mode=kv_mode, page_size=page_size))
+
+
+def decode_token_specs(shape: C.ShapeConfig) -> Any:
+    return S((shape.global_batch,), jnp.int32)

@@ -1,0 +1,8 @@
+from repro.models.model_zoo import (  # noqa: F401
+    build_model,
+    init_params,
+    init_decode_state,
+    forward_train,
+    decode_step,
+    prefill,
+)

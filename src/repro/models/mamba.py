@@ -1,0 +1,147 @@
+"""Mamba (selective SSM) block — Jamba's attention-free mixer.
+
+Faithful Mamba-1 selective scan:
+  x, z = split(in_proj(u));  x = silu(causal_depthwise_conv(x))
+  dt, B, C = x_proj(x);  dt = softplus(dt_proj(dt))
+  h_t = exp(dt A) h_{t-1} + dt B x_t ;  y_t = C h_t + D x_t
+  out = out_proj(y * silu(z))
+
+The time recurrence uses chunk-checkpointed lax.scan (O(chunk) activation
+memory); decode is the O(1) single-step update.  State = (conv_state
+(B, d_in, d_conv-1), ssm_state (B, d_in, N)).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.scan_utils import chunked_scan
+from repro.parallel.context import BATCH, constrain_act
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return mc, d_in, dt_rank
+
+
+def mamba_init(key, cfg, dtype) -> Params:
+    mc, d_in, dt_rank = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_in, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_in, mc.d_conv), jnp.float32)
+                   * (1.0 / math.sqrt(mc.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * mc.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_in, dtype,
+                              scale=dt_rank ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(
+                ks[4], (d_in,), jnp.float32) * (math.log(0.1) - math.log(1e-3))
+                + math.log(1e-3)), 1e-4, None))),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_in, d, dtype),
+    }
+
+
+def _ssm_inputs(params: Params, x: jnp.ndarray, cfg):
+    """x: (B, S, d_in) post-conv. Returns dt (f32), B, C, A."""
+    mc, d_in, dt_rank = _dims(cfg)
+    proj = x @ params["x_proj"]
+    dt, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + mc.d_state],
+                                 axis=-1)
+    dt = jax.nn.softplus(
+        (dt @ params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))        # (B,S,d_in)
+    a = -jnp.exp(params["A_log"])                       # (d_in, N)
+    return dt, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32), a
+
+
+def _conv_full(params: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Causal depthwise conv along time. x: (B, S, d_in)."""
+    mc, d_in, _ = _dims(cfg)
+    w = params["conv_w"].astype(jnp.float32)            # (d_in, K)
+    xt = x.astype(jnp.float32).transpose(0, 2, 1)       # (B, d_in, S)
+    out = jax.lax.conv_general_dilated(
+        xt[:, :, None, :], w[:, None, None, :],
+        window_strides=(1, 1), padding=((0, 0), (mc.d_conv - 1, 0)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=d_in)[:, :, 0, :]
+    out = out + params["conv_b"].astype(jnp.float32)[None, :, None]
+    return jax.nn.silu(out).transpose(0, 2, 1).astype(x.dtype)
+
+
+def mamba_apply(params: Params, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Train/prefill forward. u: (B, S, D) -> (B, S, D)."""
+    mc, d_in, _ = _dims(cfg)
+    b, s, d = u.shape
+    xz = constrain_act(u @ params["in_proj"], BATCH, None, "model")
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = _conv_full(params, x, cfg)
+    x = constrain_act(x, BATCH, None, "model")
+    dt, bm, cm, a = _ssm_inputs(params, x, cfg)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                       # (B,d_in),(B,d_in),(B,N),(B,N)
+        da = jnp.exp(dt_t[..., None] * a[None])         # (B, d_in, N)
+        dbx = (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((b, d_in, mc.d_state), jnp.float32)
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          bm.swapaxes(0, 1), cm.swapaxes(0, 1))
+    _, ys = chunked_scan(step, h0, xs, checkpoint=cfg.remat)
+    y = ys.swapaxes(0, 1)                               # (B, S, d_in)
+    y = y + params["D"][None, None] * x.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(u.dtype) @ params["out_proj"]
+
+
+def mamba_init_state(cfg, batch: int):
+    mc, d_in, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, d_in, mc.d_conv - 1), jnp.float32),
+        "ssm": jnp.zeros((batch, d_in, mc.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params: Params, u: jnp.ndarray, state, cfg):
+    """One-token decode. u: (B, 1, D)."""
+    mc, d_in, _ = _dims(cfg)
+    b = u.shape[0]
+    xz = u[:, 0] @ params["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)                    # (B, d_in)
+
+    conv = state["conv"]                                # (B, d_in, K-1)
+    window = jnp.concatenate([conv, x.astype(jnp.float32)[..., None]],
+                             axis=-1)
+    w = params["conv_w"].astype(jnp.float32)
+    xc = jnp.einsum("bdk,dk->bd", window, w) + params["conv_b"].astype(
+        jnp.float32)
+    xc = jax.nn.silu(xc).astype(u.dtype)
+    new_conv = window[..., 1:]
+
+    dt, bm, cm, a = _ssm_inputs(params, xc[:, None], cfg)
+    dt, bm, cm = dt[:, 0], bm[:, 0], cm[:, 0]
+    da = jnp.exp(dt[..., None] * a[None])
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bm[:, None, :]
+    h = da * state["ssm"] + dbx
+    y = jnp.einsum("bdn,bn->bd", h, cm)
+    y = y + params["D"][None] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(u.dtype) @ params["out_proj"]
+    return out[:, None], {"conv": new_conv, "ssm": h}

@@ -1,0 +1,152 @@
+"""RWKV6 (Finch) time-mix block — data-dependent decay, attention-free.
+
+Per head (head_size hs): matrix-valued state S in R^{hs x hs}:
+    a_t   = k_t v_t^T                      (outer product)
+    o_t   = r_t (S_t + diag(u) a_t)
+    S_t+1 = diag(w_t) S_t + a_t
+with w_t = exp(-exp(w0 + lora(x_t))) data-dependent per channel (the
+headline RWKV6 feature).  Token-shift mixing feeds x_{t-1} into the r/k/v/g/w
+projections.  State per layer: (wkv (B,H,hs,hs) f32, shift (B,D)).
+
+Train/prefill uses chunk-checkpointed lax.scan; decode is O(1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.scan_utils import chunked_scan
+from repro.parallel.context import BATCH, constrain_act
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg):
+    hs = cfg.rwkv.head_size
+    nh = cfg.d_model // hs
+    return nh, hs
+
+
+def rwkv_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    nh, hs = _dims(cfg)
+    r = cfg.rwkv
+    ks = jax.random.split(key, 10)
+    return {
+        "w_r": dense_init(ks[0], d, d, dtype),
+        "w_k": dense_init(ks[1], d, d, dtype),
+        "w_v": dense_init(ks[2], d, d, dtype),
+        "w_g": dense_init(ks[3], d, d, dtype),
+        "w_o": dense_init(ks[4], d, d, dtype),
+        # token-shift static mixes for r,k,v,g,w
+        "mix": jnp.full((5, d), 0.5, dtype),
+        # data-dependent decay lora: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.zeros((d,), jnp.float32) - 0.5,
+        "w_A": dense_init(ks[5], d, r.decay_lora, dtype),
+        "w_B": dense_init(ks[6], r.decay_lora, d, dtype,
+                          scale=1.0 / math.sqrt(r.decay_lora)),
+        "u": (jax.random.normal(ks[7], (nh, hs), jnp.float32) * 0.1),
+        # per-head output groupnorm
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _projections(params: Params, x: jnp.ndarray, x_prev: jnp.ndarray, cfg):
+    """Token-shift mix then project. x, x_prev: (..., D)."""
+    mix = params["mix"].astype(jnp.float32)
+    xf, pf = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+
+    def mixed(i):
+        return (xf * mix[i] + pf * (1 - mix[i])).astype(x.dtype)
+
+    r = mixed(0) @ params["w_r"]
+    k = mixed(1) @ params["w_k"]
+    v = mixed(2) @ params["w_v"]
+    g = mixed(3) @ params["w_g"]
+    dec = jnp.tanh((mixed(4) @ params["w_A"]).astype(jnp.float32))
+    dec = dec @ params["w_B"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(params["w0"] + dec))           # (..., D) in (0,1)
+    return r, k, v, g, w
+
+
+def _groupnorm_heads(params: Params, o: jnp.ndarray, nh: int, hs: int,
+                     eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head layernorm of the wkv output. o: (..., D) f32."""
+    shp = o.shape
+    oh = o.reshape(shp[:-1] + (nh, hs))
+    mu = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    oh = (oh - mu) * jax.lax.rsqrt(var + eps)
+    o = oh.reshape(shp)
+    return o * params["ln_x_scale"] + params["ln_x_bias"]
+
+
+def rwkv_apply(params: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Train/prefill. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    nh, hs = _dims(cfg)
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _projections(params, x, x_prev, cfg)
+
+    rh = constrain_act(r.reshape(b, s, nh, hs).astype(jnp.float32),
+                       BATCH, None, "model", None)
+    kh = constrain_act(k.reshape(b, s, nh, hs).astype(jnp.float32),
+                       BATCH, None, "model", None)
+    vh = constrain_act(v.reshape(b, s, nh, hs).astype(jnp.float32),
+                       BATCH, None, "model", None)
+    wh = constrain_act(w.reshape(b, s, nh, hs), BATCH, None, "model", None)
+    u = params["u"]                                     # (H, hs)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B,H,hs) each
+        a_t = k_t[..., :, None] * v_t[..., None, :]     # (B,H,hs,hs)
+        o_t = jnp.einsum("bhi,bhij->bhj", r_t,
+                         state + u[None, :, :, None] * a_t)
+        state = w_t[..., :, None] * state + a_t
+        return state, o_t
+
+    s0 = jnp.zeros((b, nh, hs, hs), jnp.float32)
+    xs = (rh.swapaxes(0, 1), kh.swapaxes(0, 1), vh.swapaxes(0, 1),
+          wh.swapaxes(0, 1))
+    _, os_ = chunked_scan(step, s0, xs, checkpoint=cfg.remat)
+    o = os_.swapaxes(0, 1).reshape(b, s, d)             # f32
+    o = _groupnorm_heads(params, o, nh, hs)
+    o = o * jax.nn.silu(g.astype(jnp.float32))
+    return o.astype(x.dtype) @ params["w_o"]
+
+
+def rwkv_init_state(cfg, batch: int):
+    nh, hs = _dims(cfg)
+    return {
+        "wkv": jnp.zeros((batch, nh, hs, hs), jnp.float32),
+        "shift": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+def rwkv_decode(params: Params, x: jnp.ndarray, state, cfg):
+    """One-token decode. x: (B, 1, D)."""
+    b, _, d = x.shape
+    nh, hs = _dims(cfg)
+    x_t = x[:, 0]
+    r, k, v, g, w = _projections(params, x_t,
+                                 state["shift"].astype(x.dtype), cfg)
+    rh = r.reshape(b, nh, hs).astype(jnp.float32)
+    kh = k.reshape(b, nh, hs).astype(jnp.float32)
+    vh = v.reshape(b, nh, hs).astype(jnp.float32)
+    wh = w.reshape(b, nh, hs)
+    u = params["u"]
+    a = kh[..., :, None] * vh[..., None, :]
+    o = jnp.einsum("bhi,bhij->bhj", rh,
+                   state["wkv"] + u[None, :, :, None] * a)
+    new_wkv = wh[..., :, None] * state["wkv"] + a
+    o = o.reshape(b, d)
+    o = _groupnorm_heads(params, o, nh, hs)
+    o = o * jax.nn.silu(g.astype(jnp.float32))
+    out = (o.astype(x.dtype) @ params["w_o"])[:, None]
+    return out, {"wkv": new_wkv,
+                 "shift": x_t.astype(jnp.float32)}

@@ -1,0 +1,40 @@
+"""Checkpointed chunked time scans for recurrent blocks (Mamba / RWKV).
+
+``chunked_scan`` runs a per-timestep recurrence over S steps as an outer
+lax.scan over S/chunk chunks whose body is wrapped in jax.checkpoint: the
+backward pass stores only chunk-boundary carries and recomputes inside each
+chunk, bounding activation memory at O(chunk) instead of O(S).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK = 256
+
+
+def chunked_scan(step: Callable, carry, xs, *, chunk: int = DEFAULT_CHUNK,
+                 checkpoint: bool = True) -> Tuple[Any, Any]:
+    """Like lax.scan(step, carry, xs) with chunk-level remat.
+
+    xs: pytree with leading time axis S (must divide by chunk after padding
+    is handled by the caller).
+    """
+    s = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if s <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    def chunk_body(c, x_chunk):
+        return jax.lax.scan(step, c, x_chunk)
+
+    if checkpoint:
+        chunk_body = jax.checkpoint(chunk_body)
+    carry, ys = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((s,) + a.shape[2:]), ys)
+    return carry, ys

@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (  # noqa: F401
+    batch_axes,
+    constrain,
+    param_sharding,
+    param_spec,
+    state_sharding,
+    valid_spec,
+)

@@ -1,0 +1,54 @@
+"""Activation-sharding context.
+
+Models stay mesh-agnostic; the launcher (dry-run, train, serve) installs a
+mesh here and model code calls :func:`constrain_act` at block boundaries.
+Without an installed mesh every call is a no-op (CPU smoke tests).
+
+Why this exists (perf iteration H1, see EXPERIMENTS.md §Perf): with FSDP
+weights sharded over the data axis, GSPMD may satisfy a contraction by
+REsharding activations off the batch axis instead of all-gathering the
+(much smaller) weight shards — observed as 16x-replicated attention dots
+in the phi3 baseline.  Pinning activations to (batch -> data) at layer
+boundaries forces the weight-gather strategy everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+BATCH = "__batch__"   # placeholder resolved to ("pod","data") of the mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def constrain_act(x, *entries):
+    """with_sharding_constraint honoring divisibility; no-op without mesh.
+
+    Use the BATCH sentinel for the batch dimension; e.g.
+    ``constrain_act(x, BATCH, None, "model")``.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    from repro.parallel.sharding import batch_axes, valid_spec
+    resolved = tuple(batch_axes(mesh) if e == BATCH else e for e in entries)
+    spec = valid_spec(P(*resolved), x.shape, mesh, allow_uneven=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

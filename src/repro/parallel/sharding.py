@@ -1,0 +1,254 @@
+"""Logical-axis sharding rules: DP / FSDP / TP / EP over the mesh.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Batch shards over (pod, data); tensor-parallel dims over
+``model``; MoE experts over ``model`` (expert parallelism); with
+``cfg.fsdp`` parameter/optimizer d_model dims additionally shard over
+``data`` (ZeRO-3 analogue).
+
+Every rule passes through :func:`valid_spec`, which drops a mesh axis from
+any tensor dimension it does not divide — small archs (4 heads, kv=1)
+degrade gracefully to replication on that dim instead of erroring, and the
+roofline table shows the cost.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def valid_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+               allow_uneven: bool = False) -> P:
+    """Drop mesh axes that don't divide their tensor dim (graceful TP).
+
+    ``allow_uneven``: keep a single axis on a non-divisible dim when the
+    dim is at least the axis size (GSPMD pads; <=2x worst-case waste beats
+    full replication).  Used for activation constraints (e.g. 40 heads over
+    16-way model), never for parameters.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    used: set = set()
+    for dim, axes in zip(shape, entries):
+        if axes is None:
+            out.append(None)
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        keep: list = []
+        rem = dim
+        for a in tup:
+            if a not in mesh.axis_names or a in used:
+                continue
+            size = mesh.shape[a]
+            if rem % size == 0:
+                keep.append(a)
+                used.add(a)
+                rem //= size
+            elif allow_uneven and not keep and rem >= size:
+                keep.append(a)
+                used.add(a)
+                rem = -(-rem // size)
+        out.append(tuple(keep) if len(keep) > 1 else
+                   (keep[0] if keep else None))
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules, dispatched on the param path
+# ---------------------------------------------------------------------------
+def _rule_for(path: Tuple[str, ...], ndim: int, fsdp: bool) -> P:
+    """PartitionSpec for the TRAILING logical dims of a parameter."""
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    dp = "data" if fsdp else None
+
+    if name == "embed" or name == "lm_head":
+        return P("model", dp) if name == "embed" else P(dp, "model")
+    # attention
+    if name in ("wq", "wk", "wv"):
+        return P(dp, "model")
+    if name == "wo":
+        return P("model", dp)
+    # MLA
+    if name in ("w_dq", "w_dkv"):
+        return P(dp, None)
+    if name in ("w_uq", "w_uk", "w_uv"):
+        return P(None, "model")
+    # MoE experts: EP over model on the expert dim + fsdp on d_model/d_ff
+    if parent == "ffn" and name in ("w_up", "w_gate", "w_down") and ndim >= 3:
+        return P("model", dp, None)
+    if name == "router":
+        return P(dp, None)
+    # dense FFN (incl. shared experts, rwkv channel-mix w_k/w_v)
+    if name in ("w_up", "w_gate", "w_k"):
+        return P(dp, "model")
+    if name in ("w_down", "w_v"):
+        return P("model", dp)
+    # mamba
+    if name == "in_proj":
+        return P(dp, "model")
+    if name in ("conv_w", "conv_b", "x_proj", "A_log", "D"):
+        return P("model")
+    if name == "dt_proj":
+        return P(None, "model")
+    if name == "out_proj":
+        return P("model", dp)
+    # rwkv time-mix
+    if name in ("w_r", "w_g"):
+        return P(dp, "model")
+    if name == "w_o":
+        return P("model", dp)
+    if name in ("w_A", "w_B"):
+        return P(None, None)
+    # norms, biases, scalars, mixes: replicate
+    return P()
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+               fsdp: bool, scanned: bool) -> P:
+    rule = _rule_for(path, len(shape) - (1 if scanned else 0), fsdp)
+    entries = list(rule)
+    if scanned:  # leading period axis from scan-over-layers: never sharded
+        entries = [None] + entries
+    return valid_spec(P(*entries), shape, mesh)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            names.append(str(p.idx))
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+def param_sharding(params, mesh: Mesh, cfg) -> Any:
+    """NamedSharding pytree matching ``params`` (works on ShapeDtypeStructs).
+
+    Scanned stacks live under a path containing "scan"; their leading
+    period axis is unsharded.
+    """
+    def spec_of(path, leaf):
+        names = _path_names(path)
+        scanned = "scan" in names
+        return NamedSharding(
+            mesh, param_spec(names, leaf.shape, mesh, cfg.fsdp, scanned))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+# ---------------------------------------------------------------------------
+# decode-state rules
+# ---------------------------------------------------------------------------
+QHEAD_POOL_BUDGET = 12 * 2 ** 30
+
+
+def qhead_strategy(mesh: Mesh, *, h: int, kh: int, hd: int,
+                   n_attn_layers: int, n_pages: int, page: int) -> bool:
+    """Single source of truth for the paged-KV decode layout (H5).
+
+    True  -> query heads shard over "model", pool replicated over "model"
+             (zero score-psum; softmax fully local) — MQA/small-K archs
+             whose total pool fits the per-device budget.
+    False -> head_dim shards over "model"; f32 score partials psum.
+    Must agree between state_sharding (storage) and the shard_map attention
+    (compute) or GSPMD inserts pool-sized reshards.
+    """
+    n_model = mesh.shape["model"]
+    dp = _axis_size(mesh, batch_axes(mesh))
+    bytes_repl = (n_pages * page * kh * hd * 2 * 2 * n_attn_layers
+                  // max(dp, 1))
+    return (h % n_model == 0 and kh < n_model
+            and bytes_repl <= QHEAD_POOL_BUDGET)
+
+
+def _state_rule(name: str, shape, mesh: Mesh, batch: Tuple[str, ...],
+                scanned: bool, cfg=None) -> P:
+    """KV caches / recurrent state. Trailing-dim rules; batch axes shard
+    sequences across (pod, data)."""
+    nd = len(shape) - (1 if scanned else 0)
+    if name in ("k", "v"):            # dense cache (B, S, K, H)
+        rule = [batch, "model", None, None]
+        # prefer head sharding when divisible; else sequence sharding
+        kv_heads = shape[-2]
+        if kv_heads % mesh.shape["model"] == 0:
+            rule = [batch, None, "model", None]
+    elif name in ("kp", "vp"):        # paged pools (N, page, K, H)
+        kv_heads = shape[-2]
+        if kv_heads % mesh.shape["model"] == 0:
+            rule = [batch, None, "model", None]
+        elif cfg is not None and qhead_strategy(
+                mesh, h=cfg.num_heads, kh=kv_heads, hd=shape[-1],
+                n_attn_layers=_n_attn_layers(cfg), n_pages=shape[-4],
+                page=shape[-3]):
+            rule = [batch, None, None, None]      # replicate over model (H5)
+        else:
+            rule = [batch, None, None, "model"]   # shard head_dim
+    elif name == "ckv":               # MLA latent (B, S, lora)
+        rule = [batch, None, "model"]
+    elif name == "kr":
+        rule = [batch, None, None]
+    elif name == "conv":              # mamba (B, d_in, K)
+        rule = [batch, "model", None]
+    elif name == "ssm":               # mamba (B, d_in, N)
+        rule = [batch, "model", None]
+    elif name == "wkv":               # rwkv (B, H, hs, hs)
+        rule = [batch, "model", None, None]
+    elif name in ("shift", "ffn_shift"):
+        rule = [batch, None]
+    else:
+        rule = [None] * nd
+    if scanned:
+        rule = [None] + rule
+    return valid_spec(P(*rule), shape, mesh)
+
+
+def _n_attn_layers(cfg) -> int:
+    return sum(1 for mk, _ in cfg.layer_kinds()
+               if mk in ("attn", "attn_local"))
+
+
+def state_sharding(state, mesh: Mesh, cfg) -> Any:
+    batch = batch_axes(mesh)
+
+    def spec_of(path, leaf):
+        names = _path_names(path)
+        scanned = "scan" in names
+        name = names[-1]
+        if name in ("lengths",):
+            return NamedSharding(mesh, valid_spec(P(batch), leaf.shape, mesh))
+        if name in ("table", "directory", "leaves"):
+            sp = P(batch) if name != "leaves" else P()
+            return NamedSharding(mesh, valid_spec(sp, leaf.shape, mesh))
+        if name == "enc_out":
+            return NamedSharding(
+                mesh, valid_spec(P(batch, None, None), leaf.shape, mesh))
+        return NamedSharding(
+            mesh, _state_rule(name, leaf.shape, mesh, batch, scanned, cfg))
+
+    return jax.tree_util.tree_map_with_path(spec_of, state)
+
+
+def constrain(x: jnp.ndarray, mesh: Mesh, *entries) -> jnp.ndarray:
+    """with_sharding_constraint with divisibility-checked spec."""
+    sp = valid_spec(P(*entries), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, sp))

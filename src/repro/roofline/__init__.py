@@ -1,0 +1,2 @@
+from repro.roofline.hlo_stats import collective_bytes, count_collectives  # noqa: F401
+from repro.roofline.analysis import roofline_terms, HW  # noqa: F401

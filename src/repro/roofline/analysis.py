@@ -1,0 +1,71 @@
+"""Three-term roofline from a compiled dry-run cell.
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+Hardware constants (TPU v5e-like, per the assignment): 197 TFLOP/s bf16 per
+chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Notes on sources: cost_analysis() runs on the PARTITIONED module, so flops
+and bytes are per-device already; collective_bytes is parsed per-device
+from the SPMD HLO.  MODEL_FLOPS uses the 6*N*D rule (6*N_active*D for MoE)
+per training step, or 2*N*D for a decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro import config as C
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12        # bf16 / chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link
+
+
+HW = Hardware()
+
+
+def model_flops(cfg: C.ArchConfig, shape: C.ShapeConfig) -> float:
+    """6*N*D (train) / 2*N*D (decode) with N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch                   # one token per sequence
+    return 2.0 * n * tokens
+
+
+def roofline_terms(cell: Dict, cfg: Optional[C.ArchConfig] = None,
+                   shape: Optional[C.ShapeConfig] = None,
+                   hw: Hardware = HW) -> Dict[str, float]:
+    """cell: one dryrun_results.json record. Returns terms in SECONDS
+    (per-device; chips already divided out by SPMD partitioning)."""
+    t_compute = cell["flops"] / hw.peak_flops
+    t_memory = cell["bytes_accessed"] / hw.hbm_bw
+    t_coll = cell["collective_bytes"] / hw.ici_bw
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+    }
+    dominant = max(terms, key=terms.get)  # type: ignore[arg-type]
+    bound = max(terms.values())
+    out = dict(terms)
+    out["dominant"] = dominant.replace("_s", "")
+    out["step_lower_bound_s"] = bound
+    if cfg is not None and shape is not None:
+        chips = 512 if cell["mesh"] == "2x16x16" else 256
+        mf = model_flops(cfg, shape) / chips      # per-device useful flops
+        out["model_flops_per_device"] = mf
+        out["useful_flop_frac"] = (mf / cell["flops"]) if cell["flops"] else 0
+        # roofline fraction: useful work at peak / achievable step time
+        out["roofline_frac"] = (mf / hw.peak_flops) / bound if bound else 0.0
+    return out

@@ -1,0 +1,228 @@
+"""Parse collective traffic out of optimized HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so we sum the output
+shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in ``compiled.as_text()`` (post-SPMD HLO: these are the
+real wire transfers of one device).
+
+Loop awareness: collectives inside a ``while`` body (scan-over-layers,
+microbatch grad accumulation) execute once per iteration, so each
+computation's contribution is scaled by the product of trip counts on its
+call chain.  Trip counts are recovered from the loop-condition
+computations (lax.scan lowers to ``compare(iter, constant(N), LT)``).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+_OP_ALT = "|".join(COLLECTIVE_OPS)
+# "%x = f32[..]{..} all-reduce(" — op preceded by whitespace (not part of a
+# variable name, which would have %-prefix / hyphen continuation)
+_LINE_RE = re.compile(r"=.*?\s(" + _OP_ALT + r")(-start)?\(")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_CALL_ATTRS = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_WHILE_RE = re.compile(
+    r"\swhile\(.*body=%?([\w.\-]+),\s*condition=%?([\w.\-]+)"
+    r"|\swhile\(.*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_computations(hlo: str):
+    """computation -> list of lines; plus the ENTRY computation name."""
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        is_hdr = (not line.startswith(" ") and stripped.endswith("{")
+                  and "->" in stripped)
+        if is_hdr:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if stripped.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps, entry
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest integer constant in the loop condition computation."""
+    best = 1
+    for ln in cond_lines:
+        for c in _CONST_INT.findall(ln):
+            best = max(best, int(c))
+    return best
+
+
+def _multipliers(comps: Dict[str, List[str]], entry: str) -> Dict[str, float]:
+    """Call-chain multiplier per computation (while bodies x trip count)."""
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        return {k: 1.0 for k in comps}
+    mult[entry] = 1.0
+    stack = [entry]
+    seen = set()
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        m = mult[name]
+        for ln in comps.get(name, ()):
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                body = wm.group(1) or wm.group(4)
+                cond = wm.group(2) or wm.group(3)
+                trips = _trip_count(comps.get(cond, []))
+                for callee in (body, cond):
+                    if callee:
+                        mult[callee] = max(mult[callee], m * trips)
+                        stack.append(callee)
+                continue
+            for callee in _CALL_ATTRS.findall(ln):
+                mult[callee] = max(mult[callee], m)
+                stack.append(callee)
+            bm = _BRANCHES.search(ln)
+            if bm:
+                for callee in bm.group(1).split(","):
+                    callee = callee.strip().lstrip("%")
+                    if callee:
+                        mult[callee] = max(mult[callee], m)
+                        stack.append(callee)
+    for k in comps:
+        mult.setdefault(k, 1.0)
+    return dict(mult)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Bytes moved per collective kind, loop-trip weighted (one device)."""
+    comps, entry = _parse_computations(hlo_text)
+    mult = _multipliers(comps, entry)
+    out: Dict[str, float] = defaultdict(float)
+    for name, lines in comps.items():
+        w = mult.get(name, 1.0)
+        for ln in lines:
+            m = _LINE_RE.search(ln)
+            if not m:
+                continue
+            eq = ln.find(" = ")
+            if eq < 0:
+                continue
+            # output shape(s): the text between '=' and the matched op name
+            shape_part = ln[eq + 3: m.start(1)]
+            out[m.group(1)] += _shape_bytes(shape_part) * w
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return float(sum(collective_stats(hlo_text).values()))
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(counts)
+
+
+# ---------------------------------------------------------------------------
+# loop-aware FLOP counting (cost_analysis() visits while bodies only ONCE,
+# so scan-over-layers / grad-accum flops must be recovered from the HLO)
+# ---------------------------------------------------------------------------
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+(\w[\w\-]*)\(")
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+
+
+def _shape_dims(shape_text: str):
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def dot_flops(hlo_text: str) -> Tuple[float, float]:
+    """(loop_weighted_flops, unweighted_flops) summed over dot ops.
+
+    flops(dot) = 2 * result_elements * contracted_size; operand shapes are
+    resolved from their defining lines within the same computation.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    mult = _multipliers(comps, entry)
+    weighted = 0.0
+    raw = 0.0
+    for name, lines in comps.items():
+        w = mult.get(name, 1.0)
+        shapes: Dict[str, List[int]] = {}
+        pending = []
+        for ln in lines:
+            dm = _DEF_RE.match(ln)
+            if not dm:
+                continue
+            var, shape_txt, op = dm.groups()
+            dims = _shape_dims(shape_txt)
+            if dims is not None:
+                shapes[var] = dims
+            if op == "dot":
+                pending.append((ln, dims))
+        for ln, result_dims in pending:
+            if result_dims is None:
+                continue
+            ops_m = _OPERANDS.search(ln[ln.find("dot("):])
+            cdims_m = _DOT_DIMS.search(ln)
+            contract = 1
+            if ops_m and cdims_m:
+                operands = [o.strip().lstrip("%")
+                            for o in ops_m.group(1).split(",")]
+                lhs = shapes.get(operands[0]) if operands else None
+                if lhs is not None and cdims_m.group(1):
+                    for d in cdims_m.group(1).split(","):
+                        di = int(d)
+                        if di < len(lhs):
+                            contract *= lhs[di]
+            result_elems = 1
+            for d in result_dims:
+                result_elems *= d
+            f = 2.0 * result_elems * contract
+            weighted += f * w
+            raw += f
+    return weighted, raw

@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.scheduler import BatchScheduler, Request  # noqa: F401

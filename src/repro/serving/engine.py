@@ -1,0 +1,134 @@
+"""ServeEngine: continuous-batching decode over the paged KV cache.
+
+One unified step path: every live slot advances one token per engine step.
+Slots still consuming their prompt are teacher-forced (the next prompt
+token is fed regardless of the model's argmax); slots past their prompt
+decode greedily.  Prompt feeding therefore exercises the exact same paged
+append path as decoding — there is no separate prefill code to diverge.
+
+Requests are admitted with ONE initial page; pages are allocated by the
+scheduler as lengths grow (the OS role).  The kv table mode is either
+pinned or occupancy-driven (the NDPage flatten decision).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import block_table as BT
+from repro.core.kv_page_manager import KVPageManager
+from repro.models import decode_step, init_decode_state
+from repro.serving.scheduler import BatchScheduler, Request
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_batch: int = 8,
+                 max_len: int = 256, page_size: int = 16,
+                 table_mode: Optional[str] = None):
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_len = max_len
+        max_pages_total = max_batch * (-(-max_len // page_size)) + 8
+        self.kvm = KVPageManager(max_pages_total, page_size, max_batch,
+                                 max_len)
+        self.sched = BatchScheduler(self.kvm, max_batch,
+                                    table_mode=table_mode)
+        self.max_batch = max_batch
+        self.state = init_decode_state(cfg, max_batch, max_len,
+                                       kv_mode=BT.FLAT, page_size=page_size)
+        # per-slot prompt progress
+        self._prompt_pos = np.zeros(max_batch, np.int64)
+        self._next_token = np.zeros(max_batch, np.int32)
+        # inactive slots write their (discarded) K/V into a scratch page so
+        # they can never alias a live sequence's pages
+        self._scratch_page = self.kvm.pool.allocate(1)[0]
+
+    # -- public ---------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            for slot, req in self.sched.admit():
+                # admitted with mapping for 1 token; feed prompt from step 0
+                self._prompt_pos[slot] = 0
+                self._next_token[slot] = int(req.prompt[0])
+            if not self.sched.running and not self.sched.queue:
+                break
+            if not self.sched.running:
+                continue
+            finished.extend(self._engine_step())
+        return finished
+
+    # -- internals --------------------------------------------------------------
+    def _engine_step(self) -> List[Request]:
+        mode, table, lens = self._build_tables()
+        tokens = jnp.asarray(self._next_token)
+        state = dict(self.state)
+        state["table"] = table
+        state["lengths"] = lens
+        logits, new_state = decode_step(self.params, self.cfg, state,
+                                        tokens, kv_mode=mode)
+        self.state = dict(new_state)
+        logits = np.asarray(logits)
+
+        produced: Dict[int, int] = {}
+        for sid in self.sched.active_seqs():
+            slot = self.sched.slot_of[sid]
+            req = self.sched.running[sid]
+            self._prompt_pos[slot] += 1
+            pos = self._prompt_pos[slot]
+            if pos < len(req.prompt):
+                # teacher-forced prompt consumption (pages for the whole
+                # prompt were mapped at admission)
+                self._next_token[slot] = int(req.prompt[pos])
+            else:
+                nxt = int(np.argmax(logits[slot]))
+                self._next_token[slot] = nxt
+                produced[sid] = nxt
+        return self.sched.record_tokens(produced)
+
+    def _build_tables(self):
+        mode, rows, _ = self.sched.step_tables()
+        flat = np.full((self.max_batch, self.kvm.max_pages),
+                       self._scratch_page, np.int32)
+        lens = np.zeros((self.max_batch,), np.int32)
+        for row, sid in zip(rows, self.sched.active_seqs()):
+            slot = self.sched.slot_of[sid]
+            flat[slot] = row
+            # the model writes the CURRENT token at cache index `lengths`;
+            # exactly prompt_pos tokens are materialized (prompt_pos counts
+            # every engine step this slot has taken)
+            lens[slot] = int(self._prompt_pos[slot])
+        table = jnp.asarray(flat)
+        if mode == BT.RADIX:
+            table = BT.radix_from_flat(
+                table, leaf_size=min(16, self.kvm.max_pages))
+        return mode, table, jnp.asarray(lens)
+
+
+def greedy_reference(cfg, params, prompt: np.ndarray, new_tokens: int,
+                     kv_mode: str = "dense", max_len: int = 256,
+                     page_size: int = 16) -> List[int]:
+    """Single-sequence greedy decode without the scheduler (oracle for
+    engine tests)."""
+    from repro.models import prefill
+    logits, state = prefill(params, cfg, jnp.asarray(prompt[None]),
+                            kv_mode=kv_mode, max_len=max_len,
+                            page_size=page_size)
+    out = []
+    tok = int(np.argmax(np.asarray(logits)[0]))
+    out.append(tok)
+    for _ in range(new_tokens - 1):
+        logits, state = decode_step(params, cfg, state,
+                                    jnp.asarray([tok], np.int32),
+                                    kv_mode=kv_mode)
+        tok = int(np.argmax(np.asarray(logits)[0]))
+        out.append(tok)
+    return out

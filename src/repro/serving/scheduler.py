@@ -1,0 +1,115 @@
+"""Continuous-batching scheduler over the paged KV manager.
+
+The scheduler is the "OS" of the serving stack: it admits requests while
+physical KV pages are available, allocates/frees pages through
+KVPageManager, and — NDPage's runtime decision — picks the table
+organization per step from measured occupancy (flat once occupancy crosses
+the threshold, which for dense decode is immediately; radix only helps
+sparse/prefix-shared mappings).  Table rows are memoized in the
+TranslationCache (the PWC analogue) keyed by (seq, version).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import block_table as BT
+from repro.core.kv_page_manager import KVPageManager
+from repro.core.translation_cache import TranslationCache
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray               # (S_prompt,) int32
+    max_new_tokens: int = 32
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class BatchScheduler:
+    def __init__(self, kvm: KVPageManager, max_batch: int,
+                 table_mode: Optional[str] = None):
+        self.kvm = kvm
+        self.max_batch = max_batch
+        self.queue: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}
+        self.slot_of: Dict[int, int] = {}
+        self.free_slots = list(range(max_batch - 1, -1, -1))
+        self.table_mode = table_mode          # None = occupancy-driven
+        self.tcache = TranslationCache(capacity=4 * max_batch)
+        self.versions: Dict[int, int] = {}
+        self.stats = {"admitted": 0, "completed": 0, "preempted": 0,
+                      "steps": 0}
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _can_admit(self, req: Request) -> bool:
+        need = -(-max(len(req.prompt), 1) // self.kvm.page_size) + 1
+        return bool(self.free_slots) and self.kvm.pool.free_pages >= need
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Admit queued requests into free slots; returns new (slot, req)."""
+        admitted = []
+        while self.queue and self._can_admit(self.queue[0]):
+            req = self.queue.popleft()
+            slot = self.free_slots.pop()
+            self.kvm.add_sequence(req.req_id, len(req.prompt))
+            self.running[req.req_id] = req
+            self.slot_of[req.req_id] = slot
+            self.versions[req.req_id] = 0
+            self.stats["admitted"] += 1
+            admitted.append((slot, req))
+        return admitted
+
+    # -- step bookkeeping ----------------------------------------------------
+    def active_seqs(self) -> List[int]:
+        return sorted(self.running, key=lambda r: self.slot_of[r])
+
+    def step_tables(self):
+        """(mode, table rows per running seq, lengths) for the decode step."""
+        mode = self.table_mode or self.kvm.preferred_mode()
+        seqs = self.active_seqs()
+        rows = []
+        for sid in seqs:
+            ver = self.versions[sid]
+            row = self.tcache.lookup(sid, ver)
+            if row is None:
+                pages = self.kvm.pages[sid]
+                row = np.full(self.kvm.max_pages, -1, np.int32)
+                row[: len(pages)] = pages
+                self.tcache.insert(sid, ver, row)
+            rows.append(row)
+        lengths = np.asarray([self.kvm.lengths[s] for s in seqs], np.int32)
+        self.stats["steps"] += 1
+        return mode, np.stack(rows) if rows else np.zeros(
+            (0, self.kvm.max_pages), np.int32), lengths
+
+    def record_tokens(self, tokens: Dict[int, int]) -> List[Request]:
+        """Append generated tokens; grow mappings; retire finished."""
+        finished = []
+        for sid, tok in tokens.items():
+            req = self.running[sid]
+            req.generated.append(int(tok))
+            old_pages = len(self.kvm.pages[sid])
+            self.kvm.append_token(sid)
+            if len(self.kvm.pages[sid]) != old_pages:
+                self.versions[sid] += 1       # mapping changed
+        for sid in list(self.running):
+            if self.running[sid].done:
+                req = self.running.pop(sid)
+                slot = self.slot_of.pop(sid)
+                self.free_slots.append(slot)
+                self.kvm.free_sequence(sid)
+                self.tcache.invalidate(sid)
+                self.stats["completed"] += 1
+                finished.append(req)
+        return finished

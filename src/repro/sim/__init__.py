@@ -1,0 +1,9 @@
+"""Trace-driven architectural simulator for the NDPage reproduction.
+
+A mechanistic (Sniper-style interval) timing model, written entirely in JAX:
+set-associative caches, TLBs and page-walk caches as lax.scan state, a
+queueing memory model, and the five address-translation mechanisms of the
+paper (radix / ECH / huge page / NDPage / ideal) evaluated simultaneously
+along a leading "mechanism" axis of every state array.
+"""
+from repro.sim.simulator import simulate, SimResult  # noqa: F401

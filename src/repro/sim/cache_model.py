@@ -1,0 +1,58 @@
+"""Set-associative LRU caches/TLBs as functional scan state.
+
+A cache instance is a dict of arrays:
+    tags: (sets, ways) int32   stored tag+1; 0 = invalid
+    lru:  (sets, ways) int32   per-way last-use stamp
+    ctr:  ()           int32   monotonic stamp counter
+
+``access`` is a pure function; batching over cores / mechanisms is done by
+the caller with jax.vmap.  Keys are 64B line ids (caches) or VPNs (TLBs) —
+any int32 key space works.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+State = Dict[str, jnp.ndarray]
+
+
+def make(num_sets: int, ways: int) -> State:
+    return {
+        "tags": jnp.zeros((num_sets, ways), jnp.int32),
+        "lru": jnp.zeros((num_sets, ways), jnp.int32),
+        "ctr": jnp.zeros((), jnp.int32),
+    }
+
+
+def access(state: State, key: jnp.ndarray, *, insert: jnp.ndarray,
+           enabled: jnp.ndarray) -> Tuple[State, jnp.ndarray]:
+    """One lookup (+fill on miss if ``insert``).
+
+    key: () int32; insert/enabled: () bool.  Returns (state, hit).
+    ``enabled=False`` leaves the state untouched and reports miss —
+    used for bypass (NDPage metadata) and invalid access slots.
+    """
+    num_sets, ways = state["tags"].shape
+    set_ = jax.lax.rem(key, num_sets)
+    tag = (jax.lax.div(key, num_sets) + 1).astype(jnp.int32)  # 0 = invalid
+
+    row_tags = state["tags"][set_]                 # (ways,)
+    row_lru = state["lru"][set_]
+    matches = row_tags == tag
+    hit = matches.any() & enabled
+
+    victim = jnp.argmin(row_lru)
+    way = jnp.where(hit, jnp.argmax(matches), victim)
+
+    ctr = state["ctr"] + 1
+    do_write = enabled & (hit | insert)
+    new_tag = jnp.where(hit, tag, jnp.where(insert, tag, row_tags[way]))
+    new_tags = state["tags"].at[set_, way].set(
+        jnp.where(do_write, new_tag, row_tags[way]))
+    new_lru = state["lru"].at[set_, way].set(
+        jnp.where(do_write, ctr, row_lru[way]))
+    new_state = {"tags": new_tags, "lru": new_lru, "ctr": ctr}
+    return new_state, hit

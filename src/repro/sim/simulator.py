@@ -1,0 +1,394 @@
+"""Trace-driven timing simulator for NDP/CPU address translation.
+
+Mechanistic interval model (Sniper-style): every trace entry is one memory
+instruction preceded by ``work`` non-memory instructions.  Per entry we
+model, for all five mechanisms at once (leading M axis) and all cores
+(C axis):
+
+  1. L1 DTLB lookup (free on hit) -> L2 TLB (12cy) -> page-table walk
+  2. the walk's PTE accesses: per-level PWC, then cache hierarchy or —
+     for NDPage — a direct memory access (L1 bypass), serial for
+     radix/hugepage/ndpage, parallel (max) for ECH
+  3. the data access through the cache hierarchy
+  4. a shared-memory queueing delay from aggregate measured demand
+     (M/M/1-style: q = service * rho/(1-rho), rho from running totals)
+
+PTE fills pollute the caches for radix/ECH/hugepage; NDPage bypasses; Ideal
+performs no translation at all.  Huge pages use scaled-huge TLB keys and a
+fragmentation model (4KB-fallback fraction grows with core count — the
+contiguity-exhaustion effect the paper describes for 8 cores).
+
+Everything is jit-compiled; states are dicts of (M, C, ...) int32 arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ndp_sim import MachineConfig
+from repro.core import page_table as PT
+from repro.sim import cache_model as CM
+
+MECHS = ("radix", "ech", "hugepage", "ndpage", "ideal")
+M = len(MECHS)
+MAX_PTE = 4
+
+# per-mechanism static structure.  ECH: binary (d=2) elastic cuckoo hash
+# tables per Skarlatos et al. — 2 parallel probes.
+N_PTE = np.array([4, 2, 3, 3, 0], np.int32)
+PARALLEL = np.array([0, 1, 0, 0, 0], bool)          # ECH probes in parallel
+BYPASS = np.array([0, 0, 0, 1, 0], bool)            # NDPage: PTEs skip L1
+# PWC present per (mech, level): radix all 4; hugepage 3; ndpage L4/L3 only
+PWC_ON = np.array([[1, 1, 1, 1],
+                   [0, 0, 0, 0],
+                   [1, 1, 1, 0],
+                   [1, 1, 0, 0],
+                   [0, 0, 0, 0]], bool)
+IDEAL_IDX = 4
+HUGE_IDX = 2
+
+# 2MB huge pages: 512 x 4KB pages (footprints are unscaled)
+HUGE_SHIFT = 9
+
+# huge-page cost model (the effects the paper attributes to huge pages:
+# "increased page fault latency, bloat memory footprint, and rapid
+# consumption of available physical memory contiguity"):
+#  - FRAC_4K: fraction of memory falling back to 4KB mappings as
+#    contiguity is consumed (grows with allocating cores)
+#  - HP_STALL: amortized per-access stall for 2MB fault latency /
+#    compaction / bloat-induced pressure, growing with core count.
+# Calibrated against Fig. 12-14 (hugepage ~= +10% at 1 core, ~0.9x radix
+# at 8 cores).
+FRAC_4K = {1: 0.16, 2: 0.27, 4: 0.49, 8: 0.93}
+HP_STALL_BASE = 55.0
+HP_STALL_PER_CORE = 7.0
+QUEUE_K = 6.5               # bounded-linear queue slope (cycles at rho=1)
+# ECH: elastic cuckoo tables upsize/rehash under multi-core allocation
+# pressure (cuckoo-path inserts + table moves) — per-walk cost grows with
+# the number of allocating cores (Skarlatos et al. §upsizing).
+ECH_REHASH_QUAD = 5.0    # cost ~ (cores-2)^2: churn once headroom is gone
+
+
+@dataclasses.dataclass
+class SimResult:
+    mechs: Tuple[str, ...]
+    cycles: np.ndarray            # (M, C)
+    instructions: np.ndarray      # (C,)
+    trans_cycles: np.ndarray      # (M, C) translation stall cycles
+    walk_cycles: np.ndarray       # (M, C)
+    walks: np.ndarray             # (M, C)
+    l1tlb_misses: np.ndarray      # (M, C)
+    accesses: int
+    pte_accesses: np.ndarray      # (M, C)
+    pte_l1_hits: np.ndarray       # (M, C)
+    pte_mem: np.ndarray           # (M, C)
+    data_l1_misses: np.ndarray    # (M, C)
+    data_mem: np.ndarray          # (M, C)
+
+    # -- derived metrics ----------------------------------------------------
+    def ipc(self) -> np.ndarray:
+        return self.instructions[None, :] / self.cycles
+
+    def speedup_vs(self, base: str = "radix") -> Dict[str, float]:
+        b = self.mechs.index(base)
+        mean_c = self.cycles.mean(axis=1)
+        return {m: float(mean_c[b] / mean_c[i])
+                for i, m in enumerate(self.mechs)}
+
+    def avg_ptw_latency(self) -> np.ndarray:
+        return (self.walk_cycles / np.maximum(self.walks, 1)).mean(axis=1)
+
+    def translation_fraction(self) -> np.ndarray:
+        return (self.trans_cycles / self.cycles).mean(axis=1)
+
+    def tlb_miss_rate(self) -> np.ndarray:
+        return (self.l1tlb_misses / self.accesses).mean(axis=1)
+
+    def pte_l1_miss_rate(self) -> np.ndarray:
+        return 1.0 - (self.pte_l1_hits
+                      / np.maximum(self.pte_accesses, 1)).mean(axis=1)
+
+    def data_l1_miss_rate(self) -> np.ndarray:
+        return (self.data_l1_misses / self.accesses).mean(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+def _mc(fn, mach: MachineConfig, *shape_args):
+    """Broadcast a cache constructor over (M, C)."""
+    proto = fn(*shape_args)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (M, mach.num_cores) + a.shape).copy(),
+        proto)
+
+
+def init_state(mach: MachineConfig):
+    l1 = mach.l1d
+    st = {
+        "l1": _mc(CM.make, mach, l1.num_sets, l1.ways),
+        "l1tlb": _mc(CM.make, mach, mach.l1_dtlb.entries // mach.l1_dtlb.ways,
+                     mach.l1_dtlb.ways),
+        "l2tlb": _mc(CM.make, mach, mach.l2_tlb.entries // 12, 12),
+        # 4 per-level PWCs, 32-entry fully associative
+        "pwc": jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (M, mach.num_cores, MAX_PTE) + a.shape).copy(),
+            CM.make(1, mach.pwc_entries)),
+        "clock": jnp.zeros((M, mach.num_cores), jnp.float32),
+        "mem_accs": jnp.zeros((M,), jnp.float32),
+        "counters": {k: jnp.zeros((M, mach.num_cores), jnp.float32)
+                     for k in ("trans", "walks", "walk_cyc", "l1tlb_miss",
+                               "pte_acc", "pte_l1_hit", "pte_mem",
+                               "data_l1_miss", "data_mem")},
+    }
+    if mach.l2 is not None:
+        st["l2"] = _mc(CM.make, mach, mach.l2.num_sets, mach.l2.ways)
+    if mach.l3 is not None:
+        st["l3"] = _mc(CM.make, mach, mach.l3.num_sets, mach.l3.ways)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# the per-step model
+# ---------------------------------------------------------------------------
+def _make_step(mach: MachineConfig):
+    is_cpu = mach.l2 is not None
+    mem_lat = float(mach.mem_latency)
+    service = float(mach.mem_service)
+    l1_lat = float(mach.l1d.latency)
+    l2tlb_lat = float(mach.l2_tlb.latency)
+    pwc_lat = float(mach.pwc_latency)
+    l2_lat = float(mach.l2.latency) if mach.l2 else 0.0
+    l3_lat = float(mach.l3.latency) if mach.l3 else 0.0
+    promo = HP_STALL_BASE + HP_STALL_PER_CORE * max(mach.num_cores - 1, 0)
+    ech_rehash = ECH_REHASH_QUAD * max(mach.num_cores - 2, 0) ** 2
+
+    n_pte = jnp.asarray(N_PTE)
+    parallel = jnp.asarray(PARALLEL)
+    bypass = jnp.asarray(BYPASS)
+    pwc_on = jnp.asarray(PWC_ON)
+    mech_ids = jnp.arange(M)
+
+    def mem_path(caches, line, q, *, is_pte, bypass_l1, enabled):
+        """One access through the hierarchy. Returns (caches, latency,
+        l1_hit, went_mem).  PTE fills insert (pollute) unless bypassed."""
+        do_cache = enabled & ~bypass_l1
+        l1, l1_hit = CM.access(caches["l1"], line, insert=do_cache,
+                               enabled=do_cache)
+        caches = dict(caches, l1=l1)
+        if is_cpu:
+            need2 = do_cache & ~l1_hit
+            l2, l2_hit = CM.access(caches["l2"], line, insert=need2,
+                                   enabled=need2)
+            need3 = need2 & ~l2_hit
+            l3, l3_hit = CM.access(caches["l3"], line, insert=need3,
+                                   enabled=need3)
+            caches = dict(caches, l2=l2, l3=l3)
+            went_mem = (need3 & ~l3_hit) | (enabled & bypass_l1)
+            lat = jnp.where(
+                l1_hit, l1_lat,
+                jnp.where(l2_hit, l1_lat + l2_lat,
+                          jnp.where(l3_hit, l1_lat + l2_lat + l3_lat,
+                                    l1_lat + l2_lat + l3_lat + mem_lat + q)))
+            lat = jnp.where(enabled & bypass_l1, mem_lat + q, lat)
+        else:
+            went_mem = (do_cache & ~l1_hit) | (enabled & bypass_l1)
+            lat = jnp.where(l1_hit, l1_lat, l1_lat + mem_lat + q)
+            lat = jnp.where(enabled & bypass_l1, mem_lat + q, lat)
+        lat = jnp.where(enabled, lat, 0.0)
+        return caches, lat, l1_hit & enabled, went_mem & enabled
+
+    def per_mech_core(sub, vpn, off, work, pte_lines, is4k, q, mech):
+        """sub: state slice for one (mech, core). Returns (sub, metrics)."""
+        cnt = {}
+        ideal = mech == IDEAL_IDX
+        huge = mech == HUGE_IDX
+
+        # ---- TLB ----
+        tlb_key = jnp.where(huge & ~is4k,
+                            (vpn >> HUGE_SHIFT) | (1 << 26), vpn)
+        l1tlb, l1_hit = CM.access(sub["l1tlb"], tlb_key,
+                                  insert=jnp.asarray(True),
+                                  enabled=~ideal)
+        l2tlb, l2_hit = CM.access(sub["l2tlb"], tlb_key,
+                                  insert=jnp.asarray(True),
+                                  enabled=~ideal & ~l1_hit)
+        sub = dict(sub, l1tlb=l1tlb, l2tlb=l2tlb)
+        walk = ~ideal & ~l1_hit & ~l2_hit
+        cnt["l1tlb_miss"] = (~ideal & ~l1_hit).astype(jnp.float32)
+        cnt["walks"] = walk.astype(jnp.float32)
+
+        # ---- page-table walk ----
+        # hugepage 4KB-fallback regions walk like radix (4 levels)
+        eff_n = jnp.where(huge & is4k, 4, n_pte[mech])
+        is_par = parallel[mech]
+        byp = bypass[mech]
+        walk_cyc = jnp.zeros((), jnp.float32)
+        par_max = jnp.zeros((), jnp.float32)
+        pte_acc = jnp.zeros((), jnp.float32)
+        pte_l1h = jnp.zeros((), jnp.float32)
+        pte_mem_n = jnp.zeros((), jnp.float32)
+        caches = sub
+        pwc = sub["pwc"]
+        for lvl in range(MAX_PTE):
+            en = walk & (lvl < eff_n)
+            line = pte_lines[lvl]
+            use_pwc = en & pwc_on[mech, lvl]
+            pwc_lvl = jax.tree.map(lambda a: a[lvl], pwc)
+            pwc_new, pwc_hit = CM.access(pwc_lvl, line,
+                                         insert=jnp.asarray(True),
+                                         enabled=use_pwc)
+            pwc = jax.tree.map(lambda full, new: full.at[lvl].set(new),
+                               pwc, pwc_new)
+            need_mem_path = en & ~pwc_hit
+            caches, lat, p_l1h, p_mem = mem_path(
+                caches, line, q, is_pte=True,
+                bypass_l1=byp & need_mem_path, enabled=need_mem_path)
+            lvl_lat = jnp.where(pwc_hit, pwc_lat, lat)
+            lvl_lat = jnp.where(en, lvl_lat, 0.0)
+            walk_cyc = walk_cyc + jnp.where(is_par, 0.0, lvl_lat)
+            par_max = jnp.maximum(par_max, lvl_lat)
+            pte_acc += need_mem_path.astype(jnp.float32)
+            pte_l1h += p_l1h.astype(jnp.float32)
+            pte_mem_n += p_mem.astype(jnp.float32)
+        # parallel (ECH) walks: all probes issue simultaneously and the walk
+        # completes when the HITTING probe returns — one memory-access
+        # latency plus own-bank conflict + issue overhead.  The extra
+        # probes only add traffic (counted in pte_mem -> queue pressure).
+        # Multi-core: amortized cuckoo upsizing/rehash contention.
+        walk_cyc = jnp.where(is_par, par_max + 2.0 + ech_rehash, walk_cyc)
+        sub = dict(caches, pwc=pwc)
+
+        trans = jnp.where(l1_hit | ideal, 0.0,
+                          l2tlb_lat + jnp.where(walk, walk_cyc, 0.0))
+        trans = trans + jnp.where(huge, promo, 0.0)
+        cnt["walk_cyc"] = jnp.where(walk, walk_cyc, 0.0)
+        cnt["pte_acc"] = pte_acc
+        cnt["pte_l1_hit"] = pte_l1h
+        cnt["pte_mem"] = pte_mem_n
+        cnt["trans"] = trans
+
+        # ---- data access ----
+        data_line = vpn * 64 + off
+        sub2, dlat, d_l1h, d_mem = mem_path(
+            sub, data_line, q, is_pte=False,
+            bypass_l1=jnp.asarray(False), enabled=jnp.asarray(True))
+        cnt["data_l1_miss"] = (~d_l1h).astype(jnp.float32)
+        cnt["data_mem"] = d_mem.astype(jnp.float32)
+
+        step_cycles = work.astype(jnp.float32) + 1.0 + trans + (
+            dlat - l1_lat)
+        mem_n = pte_mem_n + d_mem.astype(jnp.float32)
+        return sub2, step_cycles, cnt, mem_n
+
+    vmapped = jax.vmap(                       # over cores
+        jax.vmap(per_mech_core,               # over mechanisms
+                 in_axes=(0, None, None, None, 0, None, 0, 0)),
+        in_axes=(1, 0, 0, 0, 0, 0, None, None), out_axes=1)
+    # axes: state dicts have (M, C, ...) -> vmap C (axis 1) then M (axis 0)
+
+    def step(carry, x):
+        state = carry
+        vpn, off, work, pte_lines, is4k = x
+        # queue delay from aggregate measured memory demand (per mech).
+        # Bounded-linear law: banked DRAM degrades gently up to saturation
+        # (an M/M/1 knee over-penalizes small traffic deltas at high load).
+        elapsed = jnp.maximum(state["clock"].mean(axis=1), 1.0)   # (M,)
+        rate = state["mem_accs"] / elapsed        # aggregate accesses/cycle
+        rho = jnp.clip(rate * service, 0.0, 0.96)
+        q = service * rho * QUEUE_K                                # (M,)
+
+        caches = {k: state[k] for k in state
+                  if k not in ("clock", "mem_accs", "counters")}
+        new_caches, cyc, cnt, mem_n = vmapped(
+            caches, vpn, off, work, pte_lines, is4k, q, jnp.arange(M))
+        new_state = dict(new_caches)
+        new_state["clock"] = state["clock"] + cyc
+        new_state["mem_accs"] = state["mem_accs"] + mem_n.sum(axis=1)
+        new_state["counters"] = {
+            k: state["counters"][k] + cnt[k] for k in state["counters"]}
+        return new_state, None
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run(mach: MachineConfig, xs):
+    state = init_state(mach)
+    step = _make_step(mach)
+    state, _ = jax.lax.scan(step, state, xs)
+    return state
+
+
+def simulate(mach: MachineConfig, trace: Dict[str, np.ndarray],
+             length: int | None = None) -> SimResult:
+    """Run all 5 mechanisms over a multi-core trace on ``mach``."""
+    vpn = trace["vpn"][:, :length] if length else trace["vpn"]
+    off = trace["off"][:, : vpn.shape[1]]
+    work = trace["work"][:, : vpn.shape[1]]
+    c, t = vpn.shape
+    assert c == mach.num_cores, (c, mach.num_cores)
+
+    # precompute PTE lines per mechanism: (T, C, M, 4)
+    vj = jnp.asarray(vpn.T)                       # (T, C)
+    walks = {
+        "radix": PT.radix4_walk_lines(vj),
+        "ech": ech_pad(PT.ech_probe_lines(vj)),
+        "hugepage": ech_pad(PT.hugepage_walk_lines(vj)),
+        "ndpage": ech_pad(PT.ndpage_walk_lines(vj)),
+    }
+    # hugepage 4KB-fallback regions ALSO need radix lines; reuse radix's
+    pte = jnp.stack([walks["radix"], walks["ech"], walks["hugepage"],
+                     walks["ndpage"], jnp.zeros_like(walks["radix"])],
+                    axis=2)                       # (T, C, M, 4)
+    # hugepage fallback pages: where is4k, walk radix lines
+    frac = FRAC_4K.get(mach.num_cores, min(0.93, 0.05 + 0.11 *
+                                           mach.num_cores))
+    region = vpn >> HUGE_SHIFT
+    is4k_np = (_hash_np(region) % 1000) < int(frac * 1000)
+    is4k = jnp.asarray(is4k_np.T)                 # (T, C)
+    pte = pte.at[:, :, HUGE_IDX, :].set(
+        jnp.where(is4k[..., None], walks["radix"], pte[:, :, HUGE_IDX, :]))
+
+    xs = (vj.astype(jnp.int32), jnp.asarray(off.T), jnp.asarray(work.T),
+          pte.astype(jnp.int32), is4k)
+    state = jax.block_until_ready(_run(mach, xs))
+
+    cnt = {k: np.asarray(v) for k, v in state["counters"].items()}
+    return SimResult(
+        mechs=MECHS,
+        cycles=np.asarray(state["clock"]),
+        instructions=np.asarray((work + 1).sum(axis=1), np.float64),
+        trans_cycles=cnt["trans"],
+        walk_cycles=cnt["walk_cyc"],
+        walks=cnt["walks"],
+        l1tlb_misses=cnt["l1tlb_miss"],
+        accesses=t,
+        pte_accesses=cnt["pte_acc"],
+        pte_l1_hits=cnt["pte_l1_hit"],
+        pte_mem=cnt["pte_mem"],
+        data_l1_misses=cnt["data_l1_miss"],
+        data_mem=cnt["data_mem"],
+    )
+
+
+def ech_pad(a: jnp.ndarray) -> jnp.ndarray:
+    """Pad (T, C, 3) walk lines to (T, C, 4)."""
+    pad = [(0, 0)] * (a.ndim - 1) + [(0, MAX_PTE - a.shape[-1])]
+    return jnp.pad(a, pad)
+
+
+def _hash_np(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32) ^ np.uint32(0x9E3779B9)
+    x = (x ^ (x >> 16)) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * np.uint32(0x846CA68B)
+    return x ^ (x >> 16)

@@ -1,0 +1,7 @@
+from repro.train.optimizer import adamw_init, adamw_update  # noqa: F401
+from repro.train.train_loop import (  # noqa: F401
+    TrainState,
+    init_train_state,
+    make_train_step,
+    loss_fn,
+)

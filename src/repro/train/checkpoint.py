@@ -1,0 +1,112 @@
+"""Fault-tolerant checkpointing: atomic, mesh-agnostic, keep-last-k.
+
+Layout per step:
+    <dir>/step_000042/
+        manifest.json     step, leaf paths/shapes/dtypes, data cursor, rng
+        arrays.npz        one entry per pytree leaf (gathered to host)
+    <dir>/LATEST          text file naming the last COMMITTED step
+
+Commit protocol: write into ``step_X.tmp`` then os.replace -> ``step_X``
+and rewrite LATEST; a crash mid-write never corrupts a committed
+checkpoint (restart resumes from the previous LATEST).  Checkpoints store
+unsharded logical arrays, so a restart may use a different mesh shape /
+process count (elastic restart) — arrays are resharded on load by jit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(getattr(p, "idx", p)) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Atomically save ``tree`` (params/opt/rng pytree) at ``step``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in leaves}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                     # atomic commit
+    _write_latest(ckpt_dir, step)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _write_latest(ckpt_dir: str, step: int) -> None:
+    tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(str(step))
+    os.replace(tmp, os.path.join(ckpt_dir, "LATEST"))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def restore(ckpt_dir: str, like, step: Optional[int] = None
+            ) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Returns (tree, extra)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(final, "arrays.npz"))
+
+    keys = [k for k, _ in _flatten(like)]
+    leaves = []
+    for (k, proto) in _flatten(like):
+        arr = data[k]
+        assert tuple(arr.shape) == tuple(proto.shape), (k, arr.shape,
+                                                        proto.shape)
+        leaves.append(jnp.asarray(arr, dtype=proto.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return tree, manifest["extra"]

@@ -1,0 +1,127 @@
+"""train_step: microbatched grad-accumulation over the model zoo.
+
+Memory discipline for 1M-token global batches at 100k+ vocab: the loss is
+computed per microbatch inside a lax.scan (logits never exist at full batch)
+and each microbatch's softmax-xent runs in f32 with a z-loss regularizer.
+Gradients accumulate in f32, the AdamW update applies once per step.
+
+Optional int8 error-feedback gradient compression (repro.parallel.
+compression) can wrap the accumulated grads before the optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward_train
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+Z_LOSS = 1e-4
+AUX_WEIGHT = 1e-2
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Dict[str, Any]
+    rng: jnp.ndarray
+
+
+def init_train_state(cfg, key) -> TrainState:
+    from repro.models import init_params
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params), rng=key)
+
+
+def loss_fn(params, cfg, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Causal LM loss with masking + z-loss + MoE aux."""
+    logits, aux = forward_train(params, cfg, batch)   # (B, S, V) f32
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if cfg.vision_tokens:
+        # prepended vision positions produce logits but have no labels
+        logits = logits[:, cfg.vision_tokens:]
+    logits = logits[:, :-1]
+    targets = labels[:, 1:]
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    else:
+        mask = mask[:, 1:].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    xent = (logz - gold) * mask
+    zloss = Z_LOSS * jnp.square(logz) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (xent.sum() + zloss.sum()) / denom + AUX_WEIGHT * aux
+    return loss, {"xent": xent.sum() / denom, "aux": aux}
+
+
+def _microbatches(batch: Dict[str, jnp.ndarray], n: int, mesh=None):
+    """Split the global batch into n microbatches along a NEW leading dim.
+
+    The batch dim of the input is data-sharded; after the reshape GSPMD
+    could legally shard the MICRO dim instead (catastrophic: every device
+    would own whole microbatches and the scan would all-gather them), so
+    when a mesh is given we pin dim1 to the batch axes explicitly.
+    """
+    from repro.parallel.sharding import batch_axes, constrain
+
+    def split(a):
+        b = a.shape[0]
+        assert b % n == 0, (b, n)
+        out = a.reshape(n, b // n, *a.shape[1:])
+        if mesh is not None:
+            out = constrain(out, mesh, None, batch_axes(mesh))
+        return out
+
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, num_microbatches: int = 1,
+                    compress=None, mesh=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``compress``: optional fn(grads) -> grads applied after accumulation
+    (e.g. parallel.compression.ef_int8_allreduce under shard_map).
+    ``mesh``: enables explicit microbatch/grad sharding constraints.
+    """
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if num_microbatches == 1:
+            (loss, parts), grads = grad_fn(state.params, cfg, batch)
+        else:
+            micro = _microbatches(batch, num_microbatches, mesh)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, parts), g = grad_fn(state.params, cfg, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), parts
+
+            g0 = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), state.params)
+            if mesh is not None:
+                from repro.parallel.sharding import param_sharding
+                g0 = jax.tree.map(
+                    jax.lax.with_sharding_constraint, g0,
+                    param_sharding(g0, mesh, cfg))
+            (grads, loss), parts = jax.lax.scan(
+                acc_body, (g0, jnp.float32(0)), micro)
+            grads = jax.tree.map(lambda a: a / num_microbatches, grads)
+            loss = loss / num_microbatches
+            parts = jax.tree.map(lambda a: a.mean(), parts)
+
+        if compress is not None:
+            grads = compress(grads)
+        params, opt, om = adamw_update(opt_cfg, state.params, grads,
+                                       state.opt)
+        metrics = {"loss": loss, **parts, **om}
+        return TrainState(params=params, opt=opt, rng=state.rng), metrics
+
+    return train_step

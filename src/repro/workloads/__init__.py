@@ -1,0 +1,1 @@
+from repro.workloads.generators import generate_trace, TRACE_PATTERNS  # noqa: F401

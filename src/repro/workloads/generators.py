@@ -1,0 +1,216 @@
+"""Synthetic memory-trace generators for the Table-II workloads.
+
+Each generator emits, per core, a stream of (vpn, line_offset, work) where
+``vpn`` is the 4KB virtual page, ``line_offset`` the 64B line within it and
+``work`` the non-memory instructions preceding the access.  The statistical
+structure (footprint, reuse, spatial locality, burstiness) is modelled on
+the published characterizations of the suites:
+
+  GUPS (rnd)        uniform random updates over the whole table
+  GraphBIG (bc,cc,  power-law vertex access (zipf-ish) mixed with short
+   gc,tc)           sequential runs over CSR arrays
+  bfs / sp          frontier bursts: sequential frontier scan + random
+                    neighbour expansion
+  pr (sweep)        sequential property sweep + random edge endpoints
+  XSBench (xs)      random nuclide/grid lookups with binary-search ladders
+  DLRM (dlrm)       embedding-bag: bursts of ~40 random rows (mild zipf)
+                    + a dense sequential MLP segment
+  GenomicsBench     k-mer hash probes: uniform probes + 2-line runs
+   (gen)
+
+Footprints follow Table II UNSCALED (full dataset sizes): the simulated
+windows are shorter than 500M instructions, but all the structural ratios
+that drive the paper's effects (footprint >> TLB reach, PT working set >>
+L1, PL1/PL2 full occupancy) are preserved exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+FOOTPRINT_SCALE = 1.0
+PAGE_LINES = 64  # 4KB / 64B
+
+
+def _pages(footprint_gb: float) -> int:
+    return max(1 << 14, int(footprint_gb * FOOTPRINT_SCALE * (1 << 18)))
+
+
+def _powerlaw(rng, n: int, pages: int, alpha: float) -> np.ndarray:
+    """Zipf-flavoured page ids in [0, pages): small ids are hot."""
+    u = rng.random(n)
+    x = np.floor(pages * u ** alpha).astype(np.int64)
+    return np.minimum(x, pages - 1)
+
+
+def _hot_lines(rng, n: int, pages: int, alpha: float) -> np.ndarray:
+    """Power-law LINE accesses: hot vertices reuse their exact lines, and
+    hot ids are CONTIGUOUS (degree-renumbered vertex arrays) — so hot pages
+    and their leaf PTEs exhibit the cacheable locality real graph codes
+    show on CPU-class cache hierarchies."""
+    total = pages * PAGE_LINES
+    u = rng.random(n)
+    x = np.floor(total * u ** alpha).astype(np.int64)
+    return np.minimum(x, total - 1)
+
+
+def _runs(rng, n: int, pages: int, run_len: int, rep: int = 6) -> np.ndarray:
+    """Sequential runs: each 64B line is touched ``rep`` times in a row
+    (word-granular streaming over arrays) for ~run_len distinct lines."""
+    n_lines = max(1, n // (run_len * rep)) * run_len
+    starts = rng.integers(0, pages, max(1, n_lines // run_len)) * PAGE_LINES
+    offs = np.arange(run_len)
+    lines = (starts[:, None] + offs[None, :]).reshape(-1)
+    lines = np.repeat(lines, rep)[:n]
+    if len(lines) < n:
+        lines = np.pad(lines, (0, n - len(lines)), mode="wrap")
+    return lines % (pages * PAGE_LINES)
+
+
+def _mix_streams(rng, parts, weights, n):
+    """Interleave line-granular streams according to weights, consuming
+    each stream IN ORDER (preserves runs / repetition structure)."""
+    choice = rng.choice(len(parts), size=n, p=np.asarray(weights) /
+                        np.sum(weights))
+    out = np.empty(n, np.int64)
+    for i, p in enumerate(parts):
+        idx = np.where(choice == i)[0]
+        take = np.arange(len(idx)) % len(p)
+        out[idx] = p[take]
+    return out
+
+
+def _emit(lines: np.ndarray, work: np.ndarray):
+    vpn = (lines // PAGE_LINES).astype(np.int32)
+    off = (lines % PAGE_LINES).astype(np.int32)
+    return vpn, off, work.astype(np.int32)
+
+
+def gen_uniform(rng, n, pages):
+    lines = rng.integers(0, pages * PAGE_LINES, n)
+    work = rng.integers(1, 4, n)
+    return _emit(lines, work)
+
+
+def gen_graph(rng, n, pages, alpha=2.1):
+    hot = _hot_lines(rng, n, pages, 2 * alpha)             # hot vertices
+    seq = _runs(rng, n, pages, run_len=8, rep=8)           # CSR scans
+    cold = rng.integers(0, pages * PAGE_LINES, n)          # cold neighbours
+    lines = _mix_streams(rng, [hot, seq, cold], [0.5, 0.35, 0.15], n)
+    work = rng.integers(2, 7, n)
+    return _emit(lines, work)
+
+
+def gen_graph_frontier(rng, n, pages, alpha=2.1):
+    frontier = _runs(rng, n, pages, run_len=32, rep=8)     # frontier scan
+    expand = _hot_lines(rng, n, pages, 2 * alpha)          # hot neighbours
+    cold = rng.integers(0, pages * PAGE_LINES, n)
+    lines = _mix_streams(rng, [frontier, expand, cold], [0.45, 0.35, 0.2], n)
+    work = rng.integers(2, 6, n)
+    return _emit(lines, work)
+
+
+def gen_graph_sweep(rng, n, pages, alpha=2.1):
+    sweep = np.repeat(np.arange(n // 8 + 1), 8)[:n] % (
+        pages * PAGE_LINES)                                # property sweep
+    edges = rng.integers(0, pages * PAGE_LINES, n)         # edge endpoints
+    hot = _hot_lines(rng, n, pages, 2 * alpha)             # hot vertices
+    lines = _mix_streams(rng, [sweep, edges, hot], [0.5, 0.25, 0.25], n)
+    work = rng.integers(2, 5, n)
+    return _emit(lines, work)
+
+
+def gen_mc_lookup(rng, n, pages):
+    """XSBench: random energy -> binary-search ladder over grid pages, then
+    a short sequential read of the nuclide data (few lines, word-granular)."""
+    ladder = 6
+    read = 6
+    n_look = max(1, n // (ladder + read))
+    centers = rng.integers(0, pages, n_look)
+    cols = []
+    for step in range(ladder):
+        stride = max(pages >> (step + 1), 1)
+        if step < 3:
+            # top of the search tree: the same few nodes on every lookup
+            node = (pages >> 1) // max(stride, 1) * stride % pages
+            jitter = np.full(n_look, node)
+        else:
+            jitter = ((centers + (rng.integers(0, 2, n_look) * 2 - 1)
+                       * stride) % pages)
+        cols.append(jitter * PAGE_LINES + (_hash32(jitter) % PAGE_LINES))
+    hit_line = centers * PAGE_LINES + rng.integers(0, PAGE_LINES, n_look)
+    for r in range(read):
+        cols.append(hit_line + (r // 3))         # ~2 lines, reused
+    lines = np.stack(cols, axis=1).reshape(-1)[:n]
+    if len(lines) < n:
+        lines = np.pad(lines, (0, n - len(lines)), mode="wrap")
+    work = rng.integers(4, 9, n)
+    return _emit(lines, work)
+
+
+def gen_embedding_bag(rng, n, pages):
+    """DLRM sparse-length-sum: bags of random rows (each row ~2 lines read
+    word-by-word) + a dense sequential MLP segment."""
+    rows = _hot_lines(rng, n, pages, alpha=2.2)
+    rows = np.repeat(rows[: max(1, n // 4)], 4)[:n]        # row = 4 touches
+    dense = _runs(rng, n, max(pages // 64, 1), run_len=64, rep=8)
+    lines = _mix_streams(rng, [rows, dense], [0.6, 0.4], n)
+    work = rng.integers(1, 4, n)
+    return _emit(lines, work)
+
+
+def gen_kmer(rng, n, pages):
+    probes = rng.integers(0, pages * PAGE_LINES, n)
+    probes = np.repeat(probes[: max(1, n // 3)], 3)[:n]    # probe+payload
+    runs = _runs(rng, n, pages, run_len=4, rep=8)
+    lines = _mix_streams(rng, [probes, runs], [0.55, 0.45], n)
+    work = rng.integers(2, 6, n)
+    return _emit(lines, work)
+
+
+def _hash32(x):
+    x = np.asarray(x, np.uint32) ^ np.uint32(0x9E3779B9)
+    x = (x ^ (x >> 16)) * np.uint32(0x7FEB352D)
+    return (x ^ (x >> 15)).astype(np.int64)
+
+
+TRACE_PATTERNS = {
+    "uniform": gen_uniform,
+    "graph": gen_graph,
+    "graph_frontier": gen_graph_frontier,
+    "graph_sweep": gen_graph_sweep,
+    "mc_lookup": gen_mc_lookup,
+    "embedding_bag": gen_embedding_bag,
+    "kmer": gen_kmer,
+}
+
+
+def generate_trace(workload: str, num_cores: int, length: int,
+                   seed: int = 0) -> Dict[str, np.ndarray]:
+    """Per-core traces for a Table-II workload.
+
+    Returns dict with vpn/off/work arrays of shape (num_cores, length).
+    All cores share the dataset (same footprint region, different seeds).
+    """
+    from repro.configs.ndp_sim import WORKLOADS
+    spec = WORKLOADS[workload]
+    pattern = TRACE_PATTERNS[spec["pattern"]]
+    pages = _pages(spec["footprint_gb"])
+    vpns, offs, works = [], [], []
+    for c in range(num_cores):
+        rng = np.random.default_rng(seed * 1009 + c * 101 + hash(workload)
+                                    % 65536)
+        kwargs = {}
+        if "alpha" in spec and "alpha" in pattern.__code__.co_varnames:
+            kwargs["alpha"] = spec["alpha"]
+        v, o, w = pattern(rng, length, pages, **kwargs)
+        vpns.append(v)
+        offs.append(o)
+        works.append(w)
+    return {
+        "vpn": np.stack(vpns),
+        "off": np.stack(offs),
+        "work": np.stack(works),
+        "pages": pages,
+    }

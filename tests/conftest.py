@@ -1,0 +1,10 @@
+import os
+import sys
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests must see
+# the real single CPU device (the dry-run sets 512 itself, in-process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

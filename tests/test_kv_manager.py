@@ -1,0 +1,63 @@
+"""KVPageManager: allocation, occupancy-driven flattening, table builds."""
+import numpy as np
+import pytest
+
+from repro.core import block_table as BT
+from repro.core.kv_page_manager import KVPageManager, PagePool
+
+
+def test_pool_alloc_free():
+    pool = PagePool(8)
+    a = pool.allocate(5)
+    assert len(set(a)) == 5 and pool.free_pages == 3
+    pool.release(a[:2])
+    assert pool.free_pages == 5
+    with pytest.raises(MemoryError):
+        pool.allocate(6)
+
+
+def test_sequence_lifecycle_and_growth():
+    kvm = KVPageManager(num_pages=64, page_size=4, max_seqs=4, max_len=64)
+    kvm.add_sequence(0, prompt_len=5)       # 2 pages
+    assert len(kvm.pages[0]) == 2
+    for _ in range(3):
+        kvm.append_token(0)                 # 5..8 tokens -> 2 pages
+    assert len(kvm.pages[0]) == 2
+    kvm.append_token(0)                     # 9 tokens -> 3 pages
+    assert len(kvm.pages[0]) == 3
+    kvm.free_sequence(0)
+    assert kvm.pool.free_pages == 64
+
+
+def test_occupancy_drives_mode():
+    kvm = KVPageManager(num_pages=64, page_size=4, max_seqs=4, max_len=64,
+                        flatten_threshold=0.5)
+    kvm.add_sequence(0, prompt_len=16)      # 4 full pages -> occupancy 1.0
+    assert kvm.preferred_mode() == BT.FLAT
+    kvm.add_sequence(1, prompt_len=1)       # 1 token on a 4-slot page
+    assert kvm.occupancy() == (16 + 1) / (5 * 4)
+    kvm2 = KVPageManager(num_pages=64, page_size=16, max_seqs=4, max_len=64,
+                         flatten_threshold=0.5)
+    kvm2.add_sequence(0, prompt_len=1)      # 1/16 occupancy
+    assert kvm2.preferred_mode() == BT.RADIX
+
+
+def test_table_build_matches_host_mapping():
+    kvm = KVPageManager(num_pages=32, page_size=4, max_seqs=2, max_len=32)
+    kvm.add_sequence(7, prompt_len=10)
+    kvm.add_sequence(9, prompt_len=3)
+    flat = np.asarray(kvm.flat_table([7, 9]))
+    assert (flat[0, :3] == kvm.pages[7]).all()
+    assert flat[0, 3] == -1
+    assert (flat[1, :1] == kvm.pages[9]).all()
+    radix = kvm.radix_table([7, 9])
+    merged = np.asarray(BT.flatten_radix(radix))
+    assert (merged == flat).all()
+
+
+def test_distinct_sequences_get_distinct_pages():
+    kvm = KVPageManager(num_pages=32, page_size=4, max_seqs=4, max_len=32)
+    for sid in range(4):
+        kvm.add_sequence(sid, prompt_len=8)
+    all_pages = sum((kvm.pages[s] for s in range(4)), [])
+    assert len(all_pages) == len(set(all_pages))

@@ -1,0 +1,65 @@
+"""Unit tests for the sim-facing page-table walk models (repro.core)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import page_table as PT
+
+
+def vpns(n=1000, hi=1 << 21, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).integers(0, hi, n),
+                       jnp.int32)
+
+
+def test_radix_walk_shape_and_region():
+    a = PT.radix4_walk_lines(vpns())
+    assert a.shape == (1000, 4)
+    assert bool((a >= PT.PT_REGION_LINE).all())
+
+
+def test_ndpage_walk_is_three_accesses():
+    a = PT.ndpage_walk_lines(vpns())
+    assert a.shape == (1000, 3)
+
+
+def test_hugepage_walk_is_three_accesses():
+    assert PT.hugepage_walk_lines(vpns()).shape == (1000, 3)
+
+
+def test_ech_probes_parallel_ways():
+    assert PT.ech_probe_lines(vpns()).shape == (1000, 2)
+
+
+def test_radix_upper_levels_shared_across_neighbours():
+    """Adjacent VPNs share L4/L3/L2 nodes and differ only at the leaf."""
+    v = jnp.asarray([1000, 1001], jnp.int32)
+    a = np.asarray(PT.radix4_walk_lines(v))
+    assert (a[0, :3] == a[1, :3]).all()
+    # leaf PTEs of adjacent pages share a cache line too (8 PTEs / line)
+    assert a[0, 3] == a[1, 3]
+    v2 = jnp.asarray([1000, 1000 + 8], jnp.int32)  # crosses the line
+    a2 = np.asarray(PT.radix4_walk_lines(v2))
+    assert a2[0, 3] != a2[1, 3]
+
+
+def test_ndpage_flat_level_spans_18_bits():
+    """VPNs in the same 2^18 region hit the same flattened node."""
+    v = jnp.asarray([5, (1 << 18) - 1, 1 << 18], jnp.int32)
+    a = np.asarray(PT.ndpage_walk_lines(v))
+    node = a[:, 2] - (a[:, 2] - PT.PT_REGION_LINE) % PT.FLAT_LINES
+    assert node[0] == node[1]
+
+
+def test_occupancy_full_footprint_matches_paper_structure():
+    """Dense footprints: PL1/PL2 nearly full, PL3/PL4 nearly empty (Fig 8)."""
+    v = np.arange(0, 1 << 21)  # 8GB contiguous footprint
+    l4, l3, l2, l1 = PT.occupancy_by_level(v)
+    assert l1 > 0.95 and l2 > 0.95
+    assert l4 < 0.05 and l3 < 0.05
+    assert PT.flattened_occupancy(v) > 0.95
+
+
+def test_occupancy_sparse_footprint():
+    v = np.arange(0, 1 << 21, 512)  # one page per PL1 table
+    l4, l3, l2, l1 = PT.occupancy_by_level(v)
+    assert l1 < 0.05

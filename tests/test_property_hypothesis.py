@@ -1,0 +1,138 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import block_table as BT
+from repro.core.kv_page_manager import KVPageManager
+from repro.kernels import ref
+from repro.sim import cache_model as CM
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# cache model: inclusion & capacity invariants
+# ---------------------------------------------------------------------------
+@SET
+@given(keys=st.lists(st.integers(0, 63), min_size=1, max_size=60),
+       sets_=st.sampled_from([1, 2, 4]), ways=st.sampled_from([1, 2, 4]))
+def test_cache_hit_implies_previously_inserted(keys, sets_, ways):
+    state = CM.make(sets_, ways)
+    seen = set()
+    t = jnp.asarray(True)
+    for k in keys:
+        state, hit = CM.access(state, jnp.asarray(k, jnp.int32),
+                               insert=t, enabled=t)
+        if bool(hit):
+            assert k in seen
+        seen.add(k)
+
+
+@SET
+@given(keys=st.lists(st.integers(0, 1000), min_size=1, max_size=50))
+def test_cache_never_exceeds_capacity(keys):
+    sets_, ways = 2, 2
+    state = CM.make(sets_, ways)
+    t = jnp.asarray(True)
+    for k in keys:
+        state, _ = CM.access(state, jnp.asarray(k, jnp.int32),
+                             insert=t, enabled=t)
+    assert int((state["tags"] > 0).sum()) <= sets_ * ways
+
+
+# ---------------------------------------------------------------------------
+# block tables: flat <-> radix isomorphism for arbitrary mappings
+# ---------------------------------------------------------------------------
+@SET
+@given(data=st.data(),
+       b=st.integers(1, 4), maxp=st.sampled_from([4, 8, 16]),
+       leaf=st.sampled_from([2, 4]))
+def test_radix_flat_isomorphism(data, b, maxp, leaf):
+    rng_seed = data.draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(rng_seed)
+    flat = np.full((b, maxp), -1, np.int32)
+    for i in range(b):
+        n = rng.integers(0, maxp + 1)
+        flat[i, :n] = rng.choice(10_000, n, replace=False)
+    flat_j = jnp.asarray(flat)
+    radix = BT.radix_from_flat(flat_j, leaf_size=leaf)
+    merged = np.asarray(BT.flatten_radix(radix))
+    assert (merged == flat).all()
+
+
+# ---------------------------------------------------------------------------
+# paged attention: physical placement invariance (THE NDPage invariant)
+# ---------------------------------------------------------------------------
+@SET
+@given(seed=st.integers(0, 2**16), page=st.sampled_from([4, 8]),
+       maxp=st.sampled_from([2, 4]))
+def test_paged_attention_placement_invariance(seed, page, maxp):
+    b, h, kh, d = 2, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed % 1000), 3)
+    n = b * maxp + 1
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    kp = jax.random.normal(ks[1], (n, page, kh, d))
+    vp = jax.random.normal(ks[2], (n, page, kh, d))
+    rng = np.random.default_rng(seed)
+    tab = np.full((b, maxp), -1, np.int32)
+    lens = np.zeros((b,), np.int32)
+    pool = list(rng.permutation(n))
+    for i in range(b):
+        lens[i] = rng.integers(1, maxp * page + 1)
+        used = -(-int(lens[i]) // page)
+        tab[i, :used] = [pool.pop() for _ in range(used)]
+    out1 = ref.paged_attention_ref(q, kp, vp, jnp.asarray(tab),
+                                   jnp.asarray(lens))
+    perm = rng.permutation(n)
+    inv = np.argsort(perm)
+    tab2 = np.where(tab >= 0, inv[np.maximum(tab, 0)], -1).astype(np.int32)
+    out2 = ref.paged_attention_ref(q, kp[perm], vp[perm],
+                                   jnp.asarray(tab2), jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# allocator: pages are never shared between live sequences
+# ---------------------------------------------------------------------------
+@SET
+@given(ops=st.lists(st.tuples(st.sampled_from(["add", "append", "free"]),
+                              st.integers(0, 3)), min_size=1, max_size=40))
+def test_allocator_no_aliasing(ops):
+    kvm = KVPageManager(num_pages=128, page_size=4, max_seqs=4, max_len=64)
+    live = set()
+    for op, sid in ops:
+        try:
+            if op == "add" and sid not in live:
+                kvm.add_sequence(sid, prompt_len=3)
+                live.add(sid)
+            elif op == "append" and sid in live:
+                kvm.append_token(sid)
+            elif op == "free" and sid in live:
+                kvm.free_sequence(sid)
+                live.remove(sid)
+        except MemoryError:
+            pass
+        allocated = [p for s in live for p in kvm.pages[s]]
+        assert len(allocated) == len(set(allocated))
+
+
+# ---------------------------------------------------------------------------
+# online softmax (blockwise) == full softmax for arbitrary chunking
+# ---------------------------------------------------------------------------
+@SET
+@given(seed=st.integers(0, 1000), chunks=st.sampled_from([16, 32, 64]))
+def test_online_softmax_chunking_invariance(seed, chunks):
+    from repro.models.attention import blockwise_attention
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 2, 16))
+    v = jax.random.normal(ks[2], (1, 64, 2, 16))
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    got = blockwise_attention(q, k, v, causal=True, q_chunk=chunks,
+                              kv_chunk=chunks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

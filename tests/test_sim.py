@@ -1,0 +1,83 @@
+"""Simulator unit + behaviour tests (cache model, mechanisms ordering)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.ndp_sim import cpu_machine, ndp_machine
+from repro.sim import cache_model as CM
+from repro.sim import simulate
+from repro.workloads import generate_trace
+
+T = jnp.asarray(True)
+F = jnp.asarray(False)
+
+
+def key(x):
+    return jnp.asarray(x, jnp.int32)
+
+
+class TestCacheModel:
+    def test_miss_then_hit(self):
+        st = CM.make(4, 2)
+        st, hit = CM.access(st, key(5), insert=T, enabled=T)
+        assert not bool(hit)
+        st, hit = CM.access(st, key(5), insert=T, enabled=T)
+        assert bool(hit)
+
+    def test_lru_eviction(self):
+        st = CM.make(1, 2)  # fully assoc, 2 ways
+        for k in (1, 2):
+            st, _ = CM.access(st, key(k), insert=T, enabled=T)
+        st, _ = CM.access(st, key(1), insert=T, enabled=T)   # 1 is MRU
+        st, _ = CM.access(st, key(3), insert=T, enabled=T)   # evicts 2
+        st, hit1 = CM.access(st, key(1), insert=F, enabled=T)
+        st, hit2 = CM.access(st, key(2), insert=F, enabled=T)
+        assert bool(hit1) and not bool(hit2)
+
+    def test_disabled_access_is_invisible(self):
+        st = CM.make(4, 2)
+        st2, hit = CM.access(st, key(9), insert=T, enabled=F)
+        assert not bool(hit)
+        assert (st2["tags"] == st["tags"]).all()
+
+    def test_set_isolation(self):
+        st = CM.make(4, 1)
+        st, _ = CM.access(st, key(0), insert=T, enabled=T)   # set 0
+        st, _ = CM.access(st, key(1), insert=T, enabled=T)   # set 1
+        st, hit = CM.access(st, key(0), insert=F, enabled=T)
+        assert bool(hit)
+
+
+class TestSimulator:
+    @pytest.fixture(scope="class")
+    def result(self):
+        trace = generate_trace("rnd", 2, 3000, seed=0)
+        return simulate(ndp_machine(2), trace)
+
+    def test_ideal_is_fastest(self, result):
+        sp = result.speedup_vs()
+        assert sp["ideal"] >= max(v for k, v in sp.items() if k != "ideal")
+
+    def test_ndpage_beats_radix_on_ndp(self, result):
+        assert result.speedup_vs()["ndpage"] > 1.05
+
+    def test_ndpage_walk_shorter_than_radix(self, result):
+        ptw = result.avg_ptw_latency()
+        assert ptw[3] < ptw[0]          # ndpage < radix
+        assert ptw[4] == 0              # ideal never walks
+
+    def test_pte_l1_missrate_high_on_ndp(self, result):
+        # Observation A: PTE accesses can't use the small NDP L1
+        assert result.pte_l1_miss_rate()[0] > 0.7
+
+    def test_counters_consistent(self, result):
+        assert (result.walks <= result.l1tlb_misses + 1e-6).all()
+        assert (result.trans_cycles <= result.cycles).all()
+
+    def test_cpu_less_translation_bound_than_ndp(self):
+        trace = generate_trace("bfs", 2, 3000, seed=1)
+        ndp = simulate(ndp_machine(2), trace)
+        cpu = simulate(cpu_machine(2), trace)
+        assert (cpu.translation_fraction()[0]
+                < ndp.translation_fraction()[0])

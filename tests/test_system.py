@@ -1,0 +1,88 @@
+"""End-to-end behaviour tests for the paper's system.
+
+These tie the layers together: the architectural simulator reproduces the
+paper's headline orderings; the serving stack's NDPage mode is semantically
+transparent; training + checkpointing + data pipeline survive a restart.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_arch, smoke_variant
+from repro.configs.ndp_sim import ndp_machine
+from repro.models import init_params
+from repro.serving import Request, ServeEngine
+from repro.serving.engine import greedy_reference
+from repro.sim import simulate
+from repro.workloads import generate_trace
+
+
+class TestPaperClaims:
+    """Fast single-workload checks of the paper's key claims; the full
+    11-workload sweep lives in benchmarks/."""
+
+    @pytest.fixture(scope="class")
+    def res(self):
+        return simulate(ndp_machine(2), generate_trace("rnd", 2, 4000))
+
+    def test_mechanism_ordering(self, res):
+        sp = res.speedup_vs()
+        assert sp["ideal"] > sp["ndpage"] > sp["radix"] == 1.0
+
+    def test_ndpage_reduces_walk_accesses(self, res):
+        """Flattening L2/L1 + PWC at L4/L3: fewer PTE memory accesses."""
+        pte_mem = res.pte_mem.mean(axis=1)
+        assert pte_mem[3] < pte_mem[0]          # ndpage < radix
+
+    def test_metadata_bypass_no_pte_l1_hits(self, res):
+        """NDPage PTEs never touch the L1 (bypass -> 100% 'miss')."""
+        assert res.pte_l1_miss_rate()[3] == 1.0
+
+    def test_translation_overhead_dominates_ndp_radix(self, res):
+        assert res.translation_fraction()[0] > 0.3
+
+
+class TestServingTransparency:
+    """NDPage's serving analogue is SOFTWARE-TRANSPARENT: flat vs radix vs
+    dense caches produce identical generations."""
+
+    def test_all_kv_modes_generate_identically(self):
+        cfg = dataclasses.replace(
+            smoke_variant(get_arch("granite-moe-1b-a400m")),
+            dtype="float32")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prompt = np.asarray([5, 9, 2, 11, 7], np.int32)
+        outs = [greedy_reference(cfg, params, prompt, 6, kv_mode=m,
+                                 max_len=32, page_size=4)
+                for m in ("dense", "paged_flat", "paged_radix")]
+        assert outs[0] == outs[1] == outs[2]
+
+
+class TestEndToEnd:
+    def test_train_then_serve(self, tmp_path):
+        """Train a smoke model briefly, checkpoint, reload, serve it."""
+        from repro.train.checkpoint import restore, save
+        from repro.train.data import SyntheticLM
+        from repro.train.optimizer import AdamWConfig
+        from repro.train.train_loop import init_train_state, make_train_step
+
+        cfg = dataclasses.replace(smoke_variant(get_arch("gemma3-1b")),
+                                  dtype="float32")
+        state = init_train_state(cfg, jax.random.PRNGKey(1))
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=5e-3)))
+        data = SyntheticLM(cfg.vocab_size, seq_len=16, global_batch=4)
+        for i in range(3):
+            state, metrics = step(state, {k: jax.numpy.asarray(v) for k, v
+                                          in data.batch_at(i).items()})
+        save(str(tmp_path), 3, state.params)
+        like = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state.params)
+        params, _ = restore(str(tmp_path), like)
+
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=32, page_size=4)
+        eng.submit(Request(req_id=0, prompt=np.asarray([1, 2, 3], np.int32),
+                           max_new_tokens=4))
+        done = eng.run()
+        assert len(done) == 1 and len(done[0].generated) == 4

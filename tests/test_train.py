@@ -1,0 +1,191 @@
+"""Training substrate: optimizer, microbatching, checkpoint/restart,
+fault tolerance, gradient compression."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch, smoke_variant
+from repro.models import init_params
+from repro.train.checkpoint import latest_step, restore, save
+from repro.train.data import SyntheticLM, add_modality_stubs
+from repro.train.fault_tolerance import FaultConfig, GuardedTrainer
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.train_loop import (TrainState, init_train_state, loss_fn,
+                                    make_train_step)
+
+CFG = dataclasses.replace(smoke_variant(get_arch("internlm2-1.8b")),
+                          dtype="float32")
+OPT = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=50)
+
+
+def _data(cfg, b=4, s=16):
+    return SyntheticLM(vocab_size=cfg.vocab_size, seq_len=s, global_batch=b)
+
+
+def _jbatch(raw):
+    return {k: jnp.asarray(v) for k, v in raw.items()}
+
+
+class TestOptimizer:
+    def test_adamw_moves_params_and_clips(self):
+        params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+        opt = adamw_init(params)
+        grads = {"w": jnp.full((4, 4), 100.0), "b": jnp.full((4,), 100.0)}
+        new, opt, m = adamw_update(OPT, params, grads, opt)
+        assert m["grad_norm"] > OPT.clip_norm
+        assert not np.allclose(np.asarray(new["w"]), 1.0)
+        assert int(opt["step"]) == 1
+
+    def test_weight_decay_skips_vectors(self):
+        params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+        opt = adamw_init(params)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        new, _, _ = adamw_update(
+            dataclasses.replace(OPT._replace(weight_decay=0.5))
+            if False else OPT._replace(weight_decay=0.5),
+            params, zeros, opt)
+        assert float(new["w"][0, 0]) < 1.0      # decayed
+        assert float(new["b"][0]) == 1.0        # not decayed
+
+
+class TestTrainLoop:
+    def test_loss_decreases(self):
+        state = init_train_state(CFG, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(CFG, OPT))
+        data = _data(CFG)
+        losses = []
+        batch = _jbatch(data.batch_at(0))   # overfit one batch
+        for i in range(8):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.3
+
+    def test_microbatching_matches_full_batch(self):
+        state = init_train_state(CFG, jax.random.PRNGKey(1))
+        batch = _jbatch(_data(CFG).batch_at(0))
+        s1, m1 = jax.jit(make_train_step(CFG, OPT, 1))(state, batch)
+        s4, m4 = jax.jit(make_train_step(CFG, OPT, 4))(state, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                                   rtol=1e-5)
+        a = jax.tree.leaves(s1.params)[0]
+        b = jax.tree.leaves(s4.params)[0]
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+    def test_data_pipeline_shard_invariance(self):
+        data = _data(CFG, b=8)
+        full = data.batch_at(3)["tokens"]
+        parts = [data.batch_at(3, rank=r, world=4)["tokens"]
+                 for r in range(4)]
+        assert (np.concatenate(parts) == full).all()
+
+
+class TestCheckpoint:
+    def test_atomic_roundtrip(self, tmp_path):
+        state = init_train_state(CFG, jax.random.PRNGKey(2))
+        save(str(tmp_path), 7, state, extra={"data_step": 7})
+        like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                            state)
+        got, extra = restore(str(tmp_path), like)
+        assert extra["data_step"] == 7
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_last_k(self, tmp_path):
+        state = {"w": jnp.ones((2,))}
+        for s in (1, 2, 3, 4):
+            save(str(tmp_path), s, state, keep=2)
+        dirs = sorted(d for d in os.listdir(tmp_path)
+                      if d.startswith("step_"))
+        assert dirs == ["step_00000003", "step_00000004"]
+        assert latest_step(str(tmp_path)) == 4
+
+    def test_restart_is_bit_exact(self, tmp_path):
+        """Kill at step 3, restore, continue -> identical to uninterrupted."""
+        data = _data(CFG)
+        step = jax.jit(make_train_step(CFG, OPT))
+
+        def run(n, state):
+            for i in range(n):
+                state, _ = step(state, _jbatch(data.batch_at(i)))
+            return state
+
+        ref = run(6, init_train_state(CFG, jax.random.PRNGKey(3)))
+
+        st = run(3, init_train_state(CFG, jax.random.PRNGKey(3)))
+        save(str(tmp_path), 3, st)
+        like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                            st)
+        st2, _ = restore(str(tmp_path), like)
+        for i in range(3, 6):
+            st2, _ = step(st2, _jbatch(data.batch_at(i)))
+        for a, b in zip(jax.tree.leaves(ref.params),
+                        jax.tree.leaves(st2.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestFaultTolerance:
+    def test_retry_then_success(self, tmp_path):
+        calls = {"n": 0}
+
+        def flaky_step(state, batch):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("transient")
+            return state + 1, {"loss": 0.0}
+
+        g = GuardedTrainer(
+            FaultConfig(ckpt_dir=str(tmp_path), ckpt_every=100),
+            flaky_step, state=jnp.zeros(()))
+        m = g.run_step({"x": 0})
+        assert m is not None and g.stats.retries == 1
+        assert int(g.state) == 1
+
+    def test_persistent_failure_restores_and_raises(self, tmp_path):
+        def bad_step(state, batch):
+            raise RuntimeError("broken")
+
+        g = GuardedTrainer(
+            FaultConfig(ckpt_dir=str(tmp_path), max_retries=2,
+                        backoff_s=0.0),
+            bad_step, state=jnp.zeros(()))
+        save(str(tmp_path), 0, jnp.zeros(()))
+        with pytest.raises(RuntimeError):
+            g.run_step({})
+        assert g.stats.retries == 2 and g.stats.restores == 1
+
+    def test_periodic_checkpointing(self, tmp_path):
+        def ok(state, batch):
+            return state + 1, {}
+        g = GuardedTrainer(FaultConfig(ckpt_dir=str(tmp_path), ckpt_every=2),
+                           ok, state=jnp.zeros(()))
+        for _ in range(4):
+            g.run_step({})
+        assert latest_step(str(tmp_path)) == 4
+
+
+class TestCompression:
+    def test_error_feedback_converges(self):
+        from repro.parallel.compression import ef_quantize, zeros_error_like
+        grads = {"w": jnp.asarray([[0.301, -0.007], [2.5, 0.0011]])}
+        err = zeros_error_like(grads)
+        acc = jnp.zeros((2, 2))
+        for _ in range(64):
+            dq, err = ef_quantize(grads, err)
+            acc = acc + dq["w"]
+        # error feedback: long-run average == true gradient
+        np.testing.assert_allclose(np.asarray(acc) / 64,
+                                   np.asarray(grads["w"]), atol=0.02)
+
+    def test_quantize_roundtrip_bounded(self):
+        from repro.parallel.compression import dequantize_int8, quantize_int8
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
+                        jnp.float32)
+        q, s = quantize_int8(x)
+        assert q.dtype == jnp.int8
+        np.testing.assert_allclose(np.asarray(dequantize_int8(q, s)),
+                                   np.asarray(x), atol=float(s) * 0.51)

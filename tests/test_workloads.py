@@ -1,0 +1,45 @@
+"""Trace generator tests: shapes, determinism, footprint, locality knobs."""
+import numpy as np
+import pytest
+
+from repro.configs.ndp_sim import WORKLOADS
+from repro.workloads import generate_trace
+from repro.workloads.generators import PAGE_LINES, _pages
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_trace_shapes_and_ranges(name):
+    tr = generate_trace(name, 2, 500, seed=0)
+    assert tr["vpn"].shape == (2, 500)
+    assert tr["off"].shape == (2, 500)
+    assert (tr["vpn"] >= 0).all() and (tr["vpn"] < tr["pages"]).all()
+    assert (tr["off"] >= 0).all() and (tr["off"] < PAGE_LINES).all()
+    assert (tr["work"] >= 0).all()
+
+
+def test_determinism():
+    a = generate_trace("pr", 2, 300, seed=42)
+    b = generate_trace("pr", 2, 300, seed=42)
+    assert (a["vpn"] == b["vpn"]).all() and (a["off"] == b["off"]).all()
+
+
+def test_cores_see_different_streams_same_dataset():
+    tr = generate_trace("bc", 4, 400, seed=1)
+    assert not (tr["vpn"][0] == tr["vpn"][1]).all()
+
+
+def test_footprints_match_table2():
+    assert _pages(8) == 8 * (1 << 18)
+    assert _pages(33) == 33 * (1 << 18)
+
+
+def test_gups_is_irregular_and_graph_is_not():
+    """GUPS: ~every access a distinct line; graph: heavy line reuse."""
+    g = generate_trace("rnd", 1, 4000, seed=0)
+    lines_g = g["vpn"][0].astype(np.int64) * PAGE_LINES + g["off"][0]
+    h = generate_trace("bc", 1, 4000, seed=0)
+    lines_h = h["vpn"][0].astype(np.int64) * PAGE_LINES + h["off"][0]
+    uniq_g = len(np.unique(lines_g)) / len(lines_g)
+    uniq_h = len(np.unique(lines_h)) / len(lines_h)
+    assert uniq_g > 0.9
+    assert uniq_h < 0.75
