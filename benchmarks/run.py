@@ -1,47 +1,94 @@
 """Benchmark driver: one section per paper figure/table.
 
-Prints ``name,us_per_call,derived`` CSV and writes bench_results.json.
+Prints ``name,us_per_call,derived`` CSV and writes bench_results.json plus
+BENCH_sim.json (per-mechanism cycles + engine wall-clock — the perf
+trajectory future PRs compare against).
+
 Sections:
   * Figs 4-8:   address-translation characterization (NDP vs CPU)
   * Figs 12-14: end-to-end speedups of ECH / HugePage / NDPage / Ideal
   * kernels:    serving-layer microbenches (translation, paged attention,
                 blockwise attention, engine throughput, simulator speed)
+
+``--fast`` (or SIM_FIGS_FAST=1) runs the simulator figures on the smoke
+preset — same engine and orderings, CI wall-clock.  ``--sim-only`` skips
+the kernel microbenches.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
+import time
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
-def main() -> None:
-    from benchmarks import kernel_bench, sim_figures
+def _setup_jax_cache() -> None:
+    """Persist XLA binaries so repeat benchmark runs skip compilation."""
+    cache = os.environ.get(
+        "REPRO_JAX_CACHE_DIR",
+        os.path.join(os.path.dirname(__file__), "..", ".jax_cache"))
+    if not cache:
+        return
+    import jax
+    jax.config.update("jax_compilation_cache_dir", os.path.abspath(cache))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--fast", action="store_true",
+                   help="smoke-preset simulator figures (sub-minute)")
+    p.add_argument("--sim-only", action="store_true",
+                   help="skip the kernel microbenches")
+    args = p.parse_args(argv)
+    if args.fast:
+        os.environ["SIM_FIGS_FAST"] = "1"
+
+    _setup_jax_cache()
+    t0 = time.time()
+    from benchmarks import sim_figures
 
     rows = []
     print("name,us_per_call,derived")
     sys.stdout.flush()
 
     fig_rows, summary = sim_figures.run_all()
+    sim_wall = time.time() - t0
     for name, us, derived in fig_rows:
         print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
     rows.extend(fig_rows)
 
-    for name, us, derived in kernel_bench.run_all():
-        print(f"{name},{us:.1f},{derived}")
-        sys.stdout.flush()
-        rows.append((name, us, derived))
+    if not args.sim_only:
+        from benchmarks import kernel_bench
+        for name, us, derived in kernel_bench.run_all():
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+            rows.append((name, us, derived))
 
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     out = {
         "rows": [{"name": n, "us_per_call": u, "derived": d}
                  for n, u, d in rows],
         "speedup_summary": summary,
     }
-    path = os.path.join(os.path.dirname(__file__), "..",
-                        "bench_results.json")
-    with open(os.path.abspath(path), "w") as f:
+    with open(os.path.join(root, "bench_results.json"), "w") as f:
         json.dump(out, f, indent=1)
-    print(f"# wrote {os.path.abspath(path)}")
+
+    bench_sim = dict(summary.get("perf", {}))
+    bench_sim["figures_wall_s"] = round(sim_wall, 2)
+    bench_sim["speedups"] = {k: v for k, v in summary.items() if k != "perf"}
+    with open(os.path.join(root, "BENCH_sim.json"), "w") as f:
+        json.dump(bench_sim, f, indent=1)
+    print(f"# wrote {os.path.join(root, 'bench_results.json')}")
+    print(f"# wrote {os.path.join(root, 'BENCH_sim.json')} "
+          f"(figures wall {sim_wall:.1f}s)")
 
 
 if __name__ == "__main__":

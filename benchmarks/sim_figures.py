@@ -3,33 +3,78 @@
 Each returns a list of CSV rows (name, us_per_call, derived) where
 ``derived`` carries the figure's metric; a JSON blob with the full data is
 written to bench_results.json for EXPERIMENTS.md.
+
+Two paths share all the code:
+
+* default: the paper-figure configuration (8000-entry windows),
+* fast (``SIM_FIGS_FAST=1`` or ``benchmarks/run.py --fast``): the
+  ``smoke`` preset's short windows — same engine, same orderings, CI
+  wall-clock.
+
+``run_all`` prewarms every (workload, machine, cores) simulation through
+a small thread pool: the engine releases the GIL inside XLA, so the six
+distinct machine compiles and the 66 simulations overlap.
 """
 from __future__ import annotations
 
 import json
+import os
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.configs.ndp_sim import (CORE_COUNTS, WORKLOADS, cpu_machine,
-                                   ndp_machine)
+from repro.configs.ndp_sim import (CORE_COUNTS, PRESETS, WORKLOADS,
+                                   cpu_machine, ndp_machine)
 from repro.core import page_table as PT
 from repro.sim import simulate
+from repro.sim.mechanisms import DEFAULT_MECHS
 from repro.workloads import generate_trace
 
-TRACE_LEN = 8000
+FAST = bool(int(os.environ.get("SIM_FIGS_FAST", "0")))
+PRESET = PRESETS["smoke" if FAST else "full"]
+TRACE_LEN = PRESET.trace_len
+
 _CACHE: Dict[Tuple[str, str, int], object] = {}
+_LOCK = threading.Lock()
 
 
 def _sim(workload: str, machine: str, cores: int):
     key = (workload, machine, cores)
-    if key not in _CACHE:
+    with _LOCK:
+        hit = _CACHE.get(key)
+    if hit is None:
         mach = ndp_machine(cores) if machine == "ndp" else cpu_machine(cores)
         t0 = time.time()
-        res = simulate(mach, generate_trace(workload, cores, TRACE_LEN))
-        _CACHE[key] = (res, time.time() - t0)
-    return _CACHE[key]
+        res = simulate(mach, generate_trace(workload, cores, preset=PRESET),
+                       chunk=PRESET.chunk)
+        hit = (res, time.time() - t0)
+        with _LOCK:
+            hit = _CACHE.setdefault(key, hit)
+    return hit
+
+
+def _all_combos() -> List[Tuple[str, str, int]]:
+    combos = []
+    for w in WORKLOADS:
+        for cores in CORE_COUNTS:
+            combos.append((w, "ndp", cores))
+            combos.append((w, "cpu", cores))
+    return combos
+
+
+def prewarm(workers: int | None = None) -> float:
+    """Run every simulation the figures need, in parallel.  Returns the
+    wall-clock spent."""
+    if workers is None:
+        workers = int(os.environ.get("SIM_FIGS_WORKERS",
+                                     min(4, os.cpu_count() or 1)))
+    t0 = time.time()
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        list(ex.map(lambda k: _sim(*k), _all_combos()))
+    return time.time() - t0
 
 
 def fig4_ptw_latency() -> List[Tuple[str, float, str]]:
@@ -94,11 +139,12 @@ def fig7_miss_rates() -> List[Tuple[str, float, str]]:
     35.89% vs 26.16% data)."""
     rows = []
     pte, dat, ideal = [], [], []
+    ideal_idx = DEFAULT_MECHS.index("ideal")
     for w in WORKLOADS:
         r, t = _sim(w, "ndp", 4)
         pte.append(float(r.pte_l1_miss_rate()[0]))
         dat.append(float(r.data_l1_miss_rate()[0]))
-        ideal.append(float(r.data_l1_miss_rate()[4]))
+        ideal.append(float(r.data_l1_miss_rate()[ideal_idx]))
         rows.append((f"fig7_miss_{w}", t * 1e6,
                      f"pte={pte[-1]:.3f} data={dat[-1]:.3f} "
                      f"ideal={ideal[-1]:.3f}"))
@@ -115,7 +161,7 @@ def fig8_occupancy() -> List[Tuple[str, float, str]]:
     occs = []
     for w in WORKLOADS:
         t0 = time.time()
-        tr = generate_trace(w, 4, TRACE_LEN)
+        tr = generate_trace(w, 4, preset=PRESET)
         # occupancy over the dataset's allocated footprint: data-intensive
         # kernels touch essentially all resident pages over the full run;
         # the touched-VPN set of the window under-samples, so evaluate on
@@ -134,7 +180,7 @@ def fig8_occupancy() -> List[Tuple[str, float, str]]:
 
 def _speedup_fig(cores: int, fig: str, paper: Dict[str, float]):
     rows = []
-    sp = {m: [] for m in ("ech", "hugepage", "ndpage", "ideal")}
+    sp = {m: [] for m in DEFAULT_MECHS if m != "radix"}
     for w in WORKLOADS:
         r, t = _sim(w, "ndp", cores)
         s = r.speedup_vs()
@@ -168,9 +214,41 @@ ALL_FIGS = [fig4_ptw_latency, fig5_translation_overhead, fig6_core_scaling,
             fig7_miss_rates, fig8_occupancy]
 
 
+def perf_summary() -> Dict:
+    """Per-mechanism cycles + engine wall-clock for BENCH_sim.json —
+    the perf trajectory future PRs compare against."""
+    mech_cycles: Dict[str, List[float]] = {m: [] for m in DEFAULT_MECHS}
+    walls = []
+    steps = 0
+    for (w, machine, cores), (res, wall) in sorted(_CACHE.items()):
+        walls.append(wall)
+        steps += res.accesses * cores
+        if machine == "ndp" and cores == 4:
+            for i, m in enumerate(res.mechs):
+                mech_cycles[m].append(float(res.cycles.mean(axis=1)[i]))
+    total = float(np.sum(walls))
+    return {
+        "preset": PRESET.name,
+        "trace_len": TRACE_LEN,
+        "num_sims": len(walls),
+        "sim_wall_s_total": round(total, 3),
+        "sim_wall_s_mean": round(float(np.mean(walls)), 4) if walls else 0.0,
+        "steps_per_sec": round(steps / total, 1) if total else 0.0,
+        "mechanisms": {
+            m: {"mean_cycles_ndp4": round(float(np.mean(v)), 1),
+                "speedup_vs_radix": round(
+                    float(np.mean(mech_cycles["radix"]) / np.mean(v)), 4)}
+            for m, v in mech_cycles.items() if v
+        },
+    }
+
+
 def run_all() -> Tuple[List[Tuple[str, float, str]], Dict]:
     rows: List[Tuple[str, float, str]] = []
     summary: Dict = {}
+    warm_s = prewarm()
+    rows.append(("prewarm_all_sims", warm_s * 1e6,
+                 f"{len(_CACHE)} sims, {PRESET.name} preset"))
     for fn in ALL_FIGS:
         rows.extend(fn())
     for fn, paper_nd in ((fig12_single_core, 1.344), (fig13_four_core, 1.426),
@@ -178,4 +256,12 @@ def run_all() -> Tuple[List[Tuple[str, float, str]], Dict]:
         r, avg = fn()
         rows.extend(r)
         summary[fn.__name__] = {"ours": avg, "paper_ndpage": paper_nd}
+    summary["perf"] = perf_summary()
     return rows, summary
+
+
+if __name__ == "__main__":
+    rows, summary = run_all()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(json.dumps(summary, indent=1))

@@ -100,4 +100,45 @@ WORKLOADS: Dict[str, dict] = {
 }
 
 CORE_COUNTS: Tuple[int, ...] = (1, 4, 8)
-MECHANISMS: Tuple[str, ...] = ("radix", "ech", "hugepage", "ndpage", "ideal")
+
+
+# ---------------------------------------------------------------------------
+# simulation presets
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SimPreset:
+    """A (trace window, footprint scale, seed, chunk) bundle.
+
+    ``smoke`` shrinks the simulated window so the full simulator code
+    path runs at CI cost.  The footprint deliberately stays at Table-II
+    scale: footprints are synthetic numbers (no memory/compute cost) and
+    the paper's effects require footprint >> TLB reach and a PT working
+    set that overflows PWC+L1 — shrinking it collapses exactly the
+    ratios the ordering tests assert.  ``footprint_scale`` exists as a
+    knob for experiments that want it.  ``full`` is the paper-figure
+    configuration.
+    """
+
+    name: str
+    trace_len: int
+    footprint_scale: float      # multiplies Table-II footprint_gb
+    seed: int
+    chunk: int                  # scan chunk length (see repro.sim.simulator)
+
+
+PRESETS: Dict[str, SimPreset] = {
+    "smoke": SimPreset("smoke", trace_len=2048, footprint_scale=1.0,
+                       seed=1234, chunk=512),
+    "full": SimPreset("full", trace_len=8000, footprint_scale=1.0,
+                      seed=0, chunk=1024),
+}
+
+
+def __getattr__(name: str):
+    # MECHANISMS is sourced from the one spec registry (repro.sim.mechanisms)
+    # but resolved lazily: the simulator imports this module for
+    # MachineConfig, so an eager import here would be circular.
+    if name == "MECHANISMS":
+        from repro.sim.mechanisms import DEFAULT_MECHS
+        return DEFAULT_MECHS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

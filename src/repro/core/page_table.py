@@ -80,6 +80,20 @@ def ndpage_walk_lines(vpn: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack(out, axis=-1)
 
 
+def ndpage_pl3_walk_lines(vpn: jnp.ndarray) -> jnp.ndarray:
+    """Flattened-PL3 NDPage variant: L4, then ONE node merging L3/L2/L1
+    (2^27 PTEs of 4KB pages = 512GB of VA per node). (T,) -> (T, 2)."""
+    out = [_level_line(vpn, _SHIFTS[0], 0xA0)]
+    idx27 = (vpn & ((1 << 27) - 1)).astype(jnp.int32)
+    prefix = (vpn >> 27).astype(jnp.int32)
+    h = _mix(prefix, 0xF7)
+    # 8 possible giant nodes of 2^24 lines each (region stays in int32)
+    base = ((h & jnp.uint32(0x7)).astype(jnp.int32)) * ((1 << 27)
+                                                        // PTES_PER_LINE)
+    out.append(PT_REGION_LINE + base + idx27 // PTES_PER_LINE)
+    return jnp.stack(out, axis=-1)
+
+
 def hugepage_walk_lines(vpn: jnp.ndarray) -> jnp.ndarray:
     """2MB pages: PL4, PL3, PL2 only. (T,) -> (T, 3)."""
     return jnp.stack([_level_line(vpn, sh, 0xB0 + i)
@@ -126,6 +140,7 @@ def flattened_occupancy(vpns: np.ndarray) -> float:
 WALKS = {
     "radix": radix4_walk_lines,
     "ndpage": ndpage_walk_lines,
+    "ndpage_pl3": ndpage_pl3_walk_lines,
     "hugepage": hugepage_walk_lines,
     "ech": ech_probe_lines,
 }

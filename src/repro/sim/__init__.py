@@ -1,9 +1,12 @@
 """Trace-driven architectural simulator for the NDPage reproduction.
 
-A mechanistic (Sniper-style interval) timing model, written entirely in JAX:
-set-associative caches, TLBs and page-walk caches as lax.scan state, a
-queueing memory model, and the five address-translation mechanisms of the
-paper (radix / ECH / huge page / NDPage / ideal) evaluated simultaneously
-along a leading "mechanism" axis of every state array.
+A mechanistic (Sniper-style interval) timing model, written entirely in
+JAX: set-associative caches, TLBs and page-walk caches as chunked
+lax.scan state, a queueing memory model, and a declarative registry of
+address-translation mechanisms (``repro.sim.mechanisms``) evaluated
+simultaneously along a leading "mechanism" axis — the paper's five
+(radix / ECH / huge page / NDPage / ideal) by default.
 """
-from repro.sim.simulator import simulate, SimResult  # noqa: F401
+from repro.sim.mechanisms import (DEFAULT_MECHS, MechanismSpec,  # noqa: F401
+                                  register)
+from repro.sim.simulator import SimResult, simulate  # noqa: F401

@@ -1,0 +1,192 @@
+"""Declarative mechanism specs for the NDP translation simulator.
+
+Every address-translation mechanism the simulator can evaluate is ONE
+:class:`MechanismSpec` describing its static structure:
+
+  * how many PTE accesses a page walk performs and whether they issue
+    serially (radix-style pointer chase) or in parallel (ECH probes),
+  * whether PTE fills go through the cache hierarchy (polluting it) or
+    bypass straight to memory (NDPage),
+  * which walk levels have a page-walk cache in front of them,
+  * whether the mechanism maps 2MB huge pages (enabling the TLB-reach
+    scaling + fragmentation/promotion-stall model), and
+  * the function mapping a VPN to the PTE cache-line ids its walk touches
+    (from :mod:`repro.core.page_table`).
+
+``simulator.py``, ``cache_model.py`` callers, ``configs/ndp_sim.py``,
+``benchmarks/sim_figures.py`` and the tests all consume the one registry
+below; adding a mechanism is a single ``register(MechanismSpec(...))`` —
+see ``ndpage_pl3`` at the bottom for a worked example (a flattened-PL3
+NDPage variant that merges L3/L2/L1 into one giant node).
+
+The registry is intentionally NOT auto-simulated: :data:`DEFAULT_MECHS`
+pins the paper's five mechanisms so figure reproductions stay stable;
+``simulate(..., mechs=(...))`` opts into any registered subset/ordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import page_table as PT
+
+# Upper bound on PTE accesses per walk across all registered mechanisms;
+# walk-line arrays are padded to this width.
+MAX_PTE = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class MechanismSpec:
+    """Static structure of one address-translation mechanism."""
+
+    name: str
+    #: PTE accesses per walk (0 = no translation at all, i.e. ideal)
+    n_pte: int
+    #: probes issue simultaneously; walk latency is max() of the probes
+    #: plus a fixed issue/conflict overhead (ECH cuckoo probing)
+    parallel: bool = False
+    #: PTE accesses skip the cache hierarchy and go straight to memory
+    #: (NDPage observation A: PTEs cannot live in the tiny NDP L1 anyway)
+    bypass_l1: bool = False
+    #: page-walk cache present per walk level (index 0 = top level)
+    pwc_levels: Tuple[bool, ...] = (False,) * MAX_PTE
+    #: 2MB mappings: scaled TLB keys, 4KB-fallback fragmentation model and
+    #: amortized promotion/fault stall
+    huge: bool = False
+    #: translation is free (no TLB, no walk) — the paper's upper bound
+    ideal: bool = False
+    #: VPN -> (T, n_pte) PTE line ids; None only when n_pte == 0
+    walk_fn: Optional[Callable] = None
+    description: str = ""
+
+    def __post_init__(self):
+        if not 0 <= self.n_pte <= MAX_PTE:
+            raise ValueError(f"{self.name}: n_pte must be in [0, {MAX_PTE}]")
+        if len(self.pwc_levels) != MAX_PTE:
+            raise ValueError(f"{self.name}: pwc_levels must have {MAX_PTE} "
+                             "entries (pad with False)")
+        if self.n_pte > 0 and self.walk_fn is None:
+            raise ValueError(f"{self.name}: walking mechanisms need walk_fn")
+        if any(self.pwc_levels[self.n_pte:]):
+            raise ValueError(f"{self.name}: PWC beyond walk depth")
+
+
+@dataclasses.dataclass(frozen=True)
+class MechTables:
+    """The spec registry lowered to numpy tables with a leading M axis —
+    what the jitted simulator step actually closes over."""
+
+    names: Tuple[str, ...]
+    n_pte: np.ndarray        # (M,)   int32
+    parallel: np.ndarray     # (M,)   bool
+    bypass: np.ndarray       # (M,)   bool
+    pwc_on: np.ndarray       # (M, MAX_PTE) bool
+    huge: np.ndarray         # (M,)   bool
+    ideal: np.ndarray        # (M,)   bool
+
+    @property
+    def num_mechs(self) -> int:
+        return len(self.names)
+
+
+_REGISTRY: Dict[str, MechanismSpec] = {}
+#: callbacks run on every (re-)registration — the simulator hooks its
+#: compiled-runner cache in here so overwritten specs can't serve stale jits
+_INVALIDATE_HOOKS = []
+
+
+def on_register(hook) -> None:
+    _INVALIDATE_HOOKS.append(hook)
+
+
+def register(spec: MechanismSpec, *, overwrite: bool = False) -> MechanismSpec:
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"mechanism {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    tables_for.cache_clear()
+    for hook in _INVALIDATE_HOOKS:
+        hook()
+    return spec
+
+
+def get(name: str) -> MechanismSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown mechanism {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def specs_for(names: Tuple[str, ...]) -> Tuple[MechanismSpec, ...]:
+    return tuple(get(n) for n in names)
+
+
+@functools.lru_cache(maxsize=None)
+def tables_for(names: Tuple[str, ...]) -> MechTables:
+    specs = specs_for(names)
+    return MechTables(
+        names=tuple(s.name for s in specs),
+        n_pte=np.array([s.n_pte for s in specs], np.int32),
+        parallel=np.array([s.parallel for s in specs], bool),
+        bypass=np.array([s.bypass_l1 for s in specs], bool),
+        pwc_on=np.array([s.pwc_levels for s in specs], bool),
+        huge=np.array([s.huge for s in specs], bool),
+        ideal=np.array([s.ideal for s in specs], bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the paper's five mechanisms (Table I / Figs 12-14)
+# ---------------------------------------------------------------------------
+register(MechanismSpec(
+    name="radix", n_pte=4, pwc_levels=(True, True, True, True),
+    walk_fn=PT.radix4_walk_lines,
+    description="x86-64 4-level radix table; serial pointer chase, "
+                "per-level PWCs, PTE fills pollute the caches"))
+
+register(MechanismSpec(
+    name="ech", n_pte=2, parallel=True,
+    walk_fn=PT.ech_probe_lines,
+    description="Elastic Cuckoo Hash table (Skarlatos et al.): d=2 hashed "
+                "probes issued in parallel, no PWCs; multi-core allocation "
+                "pressure triggers upsizing/rehash churn"))
+
+register(MechanismSpec(
+    name="hugepage", n_pte=3, pwc_levels=(True, True, True, False),
+    huge=True, walk_fn=PT.hugepage_walk_lines,
+    description="2MB pages: 3-level walk and 512x TLB reach, but "
+                "fragmentation forces 4KB fallbacks and promotion/fault "
+                "stalls grow with allocating cores"))
+
+register(MechanismSpec(
+    name="ndpage", n_pte=3, bypass_l1=True,
+    pwc_levels=(True, True, False, False),
+    walk_fn=PT.ndpage_walk_lines,
+    description="NDPage: flattened L2/L1 node (one access), PTE accesses "
+                "bypass the NDP L1, PWCs only on the near-ideal L4/L3"))
+
+register(MechanismSpec(
+    name="ideal", n_pte=0, ideal=True,
+    description="no translation at all — upper bound"))
+
+# One-dataclass extension example: flatten L3/L2/L1 into a single node
+# covering 512GB of VA (2^27 entries) so the walk is L4 + one access.
+# Trades enormous per-node footprint for the shortest possible non-ideal
+# walk; kept OUT of DEFAULT_MECHS so the paper-figure runs are unchanged.
+register(MechanismSpec(
+    name="ndpage_pl3", n_pte=2, bypass_l1=True,
+    pwc_levels=(True, False, False, False),
+    walk_fn=PT.ndpage_pl3_walk_lines,
+    description="flattened-PL3 NDPage variant: L4 + one merged L3/L2/L1 "
+                "access, PTEs bypass L1"))
+
+#: the paper's evaluation set, in figure order — the simulator default
+DEFAULT_MECHS: Tuple[str, ...] = ("radix", "ech", "hugepage", "ndpage",
+                                  "ideal")

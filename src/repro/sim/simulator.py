@@ -2,8 +2,7 @@
 
 Mechanistic interval model (Sniper-style): every trace entry is one memory
 instruction preceded by ``work`` non-memory instructions.  Per entry we
-model, for all five mechanisms at once (leading M axis) and all cores
-(C axis):
+model, for all mechanisms at once (leading M axis) and all cores (C axis):
 
   1. L1 DTLB lookup (free on hit) -> L2 TLB (12cy) -> page-table walk
   2. the walk's PTE accesses: per-level PWC, then cache hierarchy or —
@@ -11,14 +10,37 @@ model, for all five mechanisms at once (leading M axis) and all cores
      radix/hugepage/ndpage, parallel (max) for ECH
   3. the data access through the cache hierarchy
   4. a shared-memory queueing delay from aggregate measured demand
-     (M/M/1-style: q = service * rho/(1-rho), rho from running totals)
+     (bounded-linear: q = service * rho * K, rho from running totals)
 
 PTE fills pollute the caches for radix/ECH/hugepage; NDPage bypasses; Ideal
 performs no translation at all.  Huge pages use scaled-huge TLB keys and a
 fragmentation model (4KB-fallback fraction grows with core count — the
 contiguity-exhaustion effect the paper describes for 8 cores).
 
-Everything is jit-compiled; states are dicts of (M, C, ...) int32 arrays.
+Which mechanisms run, and their static structure (walk depth, parallel
+probes, L1 bypass, PWC placement, huge-page semantics), comes from the
+declarative spec registry in :mod:`repro.sim.mechanisms` — adding a
+mechanism there is all it takes to simulate it.
+
+Engine
+------
+A chunked ``jax.lax.scan``, split along the only real serial dependency:
+
+* the **scan** carries nothing but the LRU tag/stamp tables and performs
+  the cache/TLB/PWC lookups (the state evolution that must be
+  sequential), emitting one packed int32 of hit bits per (mech, core)
+  per entry;
+* a vectorized **epilogue** (same jit) expands the hit bits over the
+  whole chunk at once and does every latency/counter computation there —
+  the per-step graph stays tiny, which is what per-op-overhead-bound CPU
+  backends need.
+
+The trace is pre-generated, padded to fixed-shape chunks, and streamed
+through ONE jitted runner whose state buffers are donated between chunks.
+The runner is compiled once per (MachineConfig, mechanism tuple, chunk
+length) — trace length never retriggers compilation.  The queueing delay
+is held constant within a chunk (recomputed from aggregate demand at
+every chunk boundary), which is what makes the split exact.
 """
 from __future__ import annotations
 
@@ -32,25 +54,16 @@ import numpy as np
 
 from repro.configs.ndp_sim import MachineConfig
 from repro.core import page_table as PT
-from repro.sim import cache_model as CM
+from repro.sim import mechanisms as _mechanisms
+from repro.sim.mechanisms import (DEFAULT_MECHS, MAX_PTE, MechTables,
+                                  specs_for, tables_for)
 
-MECHS = ("radix", "ech", "hugepage", "ndpage", "ideal")
+MECHS = DEFAULT_MECHS
 M = len(MECHS)
-MAX_PTE = 4
 
-# per-mechanism static structure.  ECH: binary (d=2) elastic cuckoo hash
-# tables per Skarlatos et al. — 2 parallel probes.
-N_PTE = np.array([4, 2, 3, 3, 0], np.int32)
-PARALLEL = np.array([0, 1, 0, 0, 0], bool)          # ECH probes in parallel
-BYPASS = np.array([0, 0, 0, 1, 0], bool)            # NDPage: PTEs skip L1
-# PWC present per (mech, level): radix all 4; hugepage 3; ndpage L4/L3 only
-PWC_ON = np.array([[1, 1, 1, 1],
-                   [0, 0, 0, 0],
-                   [1, 1, 1, 0],
-                   [1, 1, 0, 0],
-                   [0, 0, 0, 0]], bool)
-IDEAL_IDX = 4
-HUGE_IDX = 2
+#: scan-chunk length; traces are padded to a multiple of this so one
+#: compiled runner serves every trace length
+DEFAULT_CHUNK = 512
 
 # 2MB huge pages: 512 x 4KB pages (footprints are unscaled)
 HUGE_SHIFT = 9
@@ -72,6 +85,8 @@ QUEUE_K = 6.5               # bounded-linear queue slope (cycles at rho=1)
 # pressure (cuckoo-path inserts + table moves) — per-walk cost grows with
 # the number of allocating cores (Skarlatos et al. §upsizing).
 ECH_REHASH_QUAD = 5.0    # cost ~ (cores-2)^2: churn once headroom is gone
+
+_INT_MIN = jnp.iinfo(jnp.int32).min
 
 
 @dataclasses.dataclass
@@ -120,252 +135,363 @@ class SimResult:
 # ---------------------------------------------------------------------------
 # state construction
 # ---------------------------------------------------------------------------
-def _mc(fn, mach: MachineConfig, *shape_args):
-    """Broadcast a cache constructor over (M, C)."""
-    proto = fn(*shape_args)
-    return jax.tree.map(
-        lambda a: jnp.broadcast_to(a, (M, mach.num_cores) + a.shape).copy(),
-        proto)
-
-
-def init_state(mach: MachineConfig):
-    l1 = mach.l1d
-    st = {
-        "l1": _mc(CM.make, mach, l1.num_sets, l1.ways),
-        "l1tlb": _mc(CM.make, mach, mach.l1_dtlb.entries // mach.l1_dtlb.ways,
-                     mach.l1_dtlb.ways),
-        "l2tlb": _mc(CM.make, mach, mach.l2_tlb.entries // 12, 12),
-        # 4 per-level PWCs, 32-entry fully associative
-        "pwc": jax.tree.map(
-            lambda a: jnp.broadcast_to(
-                a, (M, mach.num_cores, MAX_PTE) + a.shape).copy(),
-            CM.make(1, mach.pwc_entries)),
-        "clock": jnp.zeros((M, mach.num_cores), jnp.float32),
-        "mem_accs": jnp.zeros((M,), jnp.float32),
-        "counters": {k: jnp.zeros((M, mach.num_cores), jnp.float32)
-                     for k in ("trans", "walks", "walk_cyc", "l1tlb_miss",
-                               "pte_acc", "pte_l1_hit", "pte_mem",
-                               "data_l1_miss", "data_mem")},
+def _table_shapes(mach: MachineConfig) -> Dict[str, Tuple[int, int]]:
+    """name -> (num_sets, ways) for every LRU table of one (mech, core)."""
+    shapes = {
+        "l1": (mach.l1d.num_sets, mach.l1d.ways),
+        "l1tlb": (mach.l1_dtlb.entries // mach.l1_dtlb.ways,
+                  mach.l1_dtlb.ways),
+        "l2tlb": (mach.l2_tlb.entries // 12, 12),
+        # per-level PWCs as one table: set index IS the walk level
+        "pwc": (MAX_PTE, mach.pwc_entries),
     }
     if mach.l2 is not None:
-        st["l2"] = _mc(CM.make, mach, mach.l2.num_sets, mach.l2.ways)
+        shapes["l2"] = (mach.l2.num_sets, mach.l2.ways)
     if mach.l3 is not None:
-        st["l3"] = _mc(CM.make, mach, mach.l3.num_sets, mach.l3.ways)
+        shapes["l3"] = (mach.l3.num_sets, mach.l3.ways)
+    return shapes
+
+
+def init_state(mach: MachineConfig, m: int = M):
+    c = mach.num_cores
+
+    # tables are laid out (C, M, sets, ways): both vmap levels then map
+    # axis 0 with axis-0 outputs, so no per-step transpose (= full table
+    # copy) is ever materialized.  Public results stay (M, C).
+    def table(sets, ways):
+        return {"tags": jnp.zeros((c, m, sets, ways), jnp.int32),
+                "lru": jnp.zeros((c, m, sets, ways), jnp.int32)}
+
+    st = {name: table(*shape) for name, shape in _table_shapes(mach).items()}
+    st["stamp"] = jnp.zeros((c, m), jnp.int32)
+    st["clock"] = jnp.zeros((m, c), jnp.float32)
+    st["mem_accs"] = jnp.zeros((m,), jnp.float32)
+    st["counters"] = {k: jnp.zeros((m, c), jnp.float32)
+                      for k in ("trans", "walks", "walk_cyc", "l1tlb_miss",
+                                "pte_acc", "pte_l1_hit", "pte_mem",
+                                "data_l1_miss", "data_mem")}
     return st
 
 
 # ---------------------------------------------------------------------------
-# the per-step model
+# the model: sequential hit extraction + vectorized timing
 # ---------------------------------------------------------------------------
-def _make_step(mach: MachineConfig):
+def _build_model(mach: MachineConfig, tables: MechTables):
+    m = tables.num_mechs
     is_cpu = mach.l2 is not None
+    hier = ("l1", "l2", "l3") if is_cpu else ("l1",)
+    shapes = _table_shapes(mach)
     mem_lat = float(mach.mem_latency)
-    service = float(mach.mem_service)
     l1_lat = float(mach.l1d.latency)
     l2tlb_lat = float(mach.l2_tlb.latency)
     pwc_lat = float(mach.pwc_latency)
-    l2_lat = float(mach.l2.latency) if mach.l2 else 0.0
-    l3_lat = float(mach.l3.latency) if mach.l3 else 0.0
+    hier_lat = [float(mach.l1d.latency),
+                float(mach.l2.latency) if mach.l2 else 0.0,
+                float(mach.l3.latency) if mach.l3 else 0.0]
     promo = HP_STALL_BASE + HP_STALL_PER_CORE * max(mach.num_cores - 1, 0)
     ech_rehash = ECH_REHASH_QUAD * max(mach.num_cores - 2, 0) ** 2
 
-    n_pte = jnp.asarray(N_PTE)
-    parallel = jnp.asarray(PARALLEL)
-    bypass = jnp.asarray(BYPASS)
-    pwc_on = jnp.asarray(PWC_ON)
-    mech_ids = jnp.arange(M)
+    n_pte = jnp.asarray(tables.n_pte)
+    parallel = jnp.asarray(tables.parallel)
+    bypass = jnp.asarray(tables.bypass)
+    pwc_on = jnp.asarray(tables.pwc_on)
+    huge_tab = jnp.asarray(tables.huge)
+    ideal_tab = jnp.asarray(tables.ideal)
 
-    def mem_path(caches, line, q, *, is_pte, bypass_l1, enabled):
-        """One access through the hierarchy. Returns (caches, latency,
-        l1_hit, went_mem).  PTE fills insert (pollute) unless bypassed."""
-        do_cache = enabled & ~bypass_l1
-        l1, l1_hit = CM.access(caches["l1"], line, insert=do_cache,
-                               enabled=do_cache)
-        caches = dict(caches, l1=l1)
-        if is_cpu:
-            need2 = do_cache & ~l1_hit
-            l2, l2_hit = CM.access(caches["l2"], line, insert=need2,
-                                   enabled=need2)
-            need3 = need2 & ~l2_hit
-            l3, l3_hit = CM.access(caches["l3"], line, insert=need3,
-                                   enabled=need3)
-            caches = dict(caches, l2=l2, l3=l3)
-            went_mem = (need3 & ~l3_hit) | (enabled & bypass_l1)
-            lat = jnp.where(
-                l1_hit, l1_lat,
-                jnp.where(l2_hit, l1_lat + l2_lat,
-                          jnp.where(l3_hit, l1_lat + l2_lat + l3_lat,
-                                    l1_lat + l2_lat + l3_lat + mem_lat + q)))
-            lat = jnp.where(enabled & bypass_l1, mem_lat + q, lat)
+    # hit-bit layout of the packed per-entry int32
+    #   0: l1tlb  1: l2tlb  2..5: pwc level  6+5*h..10+5*h: hierarchy
+    #   level h hits for [pte0..pte3, data]
+    n_bits = 6 + 5 * len(hier)
+    assert n_bits <= 31
+
+    # LRU stamp slots: every access site gets a fixed offset so one scalar
+    # stamp per (mech, core) serves all tables with program-order ties
+    n_slots = 2 + MAX_PTE + 5 * len(hier)
+
+    def access(tab, sets, key, en, stamp, *, set_override=None):
+        """One scalar LRU lookup+fill.  Scalar set index keeps XLA on the
+        dynamic-slice fast path — this is the per-step hot loop."""
+        num_sets, _ = sets
+        if set_override is None:
+            s = jax.lax.rem(key, num_sets)
+            tag = jax.lax.div(key, num_sets) + 1
         else:
-            went_mem = (do_cache & ~l1_hit) | (enabled & bypass_l1)
-            lat = jnp.where(l1_hit, l1_lat, l1_lat + mem_lat + q)
-            lat = jnp.where(enabled & bypass_l1, mem_lat + q, lat)
-        lat = jnp.where(enabled, lat, 0.0)
-        return caches, lat, l1_hit & enabled, went_mem & enabled
+            s = set_override                        # pwc: set = walk level
+            tag = key + 1
+        row_tags = tab["tags"][s]
+        row_lru = tab["lru"][s]
+        match = row_tags == tag
+        hit = match.any() & en
+        # a match wins the argmin outright; otherwise it picks true LRU
+        way = jnp.argmin(jnp.where(match, _INT_MIN, row_lru))
+        s_safe = jnp.where(en, s, num_sets)         # disabled -> dropped
+        new = {"tags": tab["tags"].at[s_safe, way].set(tag, mode="drop"),
+               "lru": tab["lru"].at[s_safe, way].set(stamp, mode="drop")}
+        return new, hit
 
-    def per_mech_core(sub, vpn, off, work, pte_lines, is4k, q, mech):
-        """sub: state slice for one (mech, core). Returns (sub, metrics)."""
-        cnt = {}
-        ideal = mech == IDEAL_IDX
-        huge = mech == HUGE_IDX
+    def per_mc(sub, stamp, vpn, off, pte_lines, is4k, valid, mech):
+        """Hit extraction for one (mech, core): touches every table once
+        per gated access site, returns the packed hit bits."""
+        ideal = ideal_tab[mech]
+        huge = huge_tab[mech]
+        byp = bypass[mech]
 
-        # ---- TLB ----
         tlb_key = jnp.where(huge & ~is4k,
                             (vpn >> HUGE_SHIFT) | (1 << 26), vpn)
-        l1tlb, l1_hit = CM.access(sub["l1tlb"], tlb_key,
-                                  insert=jnp.asarray(True),
-                                  enabled=~ideal)
-        l2tlb, l2_hit = CM.access(sub["l2tlb"], tlb_key,
-                                  insert=jnp.asarray(True),
-                                  enabled=~ideal & ~l1_hit)
-        sub = dict(sub, l1tlb=l1tlb, l2tlb=l2tlb)
-        walk = ~ideal & ~l1_hit & ~l2_hit
-        cnt["l1tlb_miss"] = (~ideal & ~l1_hit).astype(jnp.float32)
-        cnt["walks"] = walk.astype(jnp.float32)
+        en0 = valid & ~ideal
+        sub["l1tlb"], h_l1tlb = access(sub["l1tlb"], shapes["l1tlb"],
+                                       tlb_key, en0, stamp)
+        en1 = en0 & ~h_l1tlb
+        sub["l2tlb"], h_l2tlb = access(sub["l2tlb"], shapes["l2tlb"],
+                                       tlb_key, en1, stamp + 1)
+        walk = en1 & ~h_l2tlb
 
-        # ---- page-table walk ----
         # hugepage 4KB-fallback regions walk like radix (4 levels)
-        eff_n = jnp.where(huge & is4k, 4, n_pte[mech])
-        is_par = parallel[mech]
-        byp = bypass[mech]
-        walk_cyc = jnp.zeros((), jnp.float32)
-        par_max = jnp.zeros((), jnp.float32)
-        pte_acc = jnp.zeros((), jnp.float32)
-        pte_l1h = jnp.zeros((), jnp.float32)
-        pte_mem_n = jnp.zeros((), jnp.float32)
-        caches = sub
-        pwc = sub["pwc"]
+        eff_n = jnp.where(huge & is4k, MAX_PTE, n_pte[mech])
+        bits = [h_l1tlb, h_l2tlb]
+        pwc_hits = []
         for lvl in range(MAX_PTE):
-            en = walk & (lvl < eff_n)
-            line = pte_lines[lvl]
-            use_pwc = en & pwc_on[mech, lvl]
-            pwc_lvl = jax.tree.map(lambda a: a[lvl], pwc)
-            pwc_new, pwc_hit = CM.access(pwc_lvl, line,
-                                         insert=jnp.asarray(True),
-                                         enabled=use_pwc)
-            pwc = jax.tree.map(lambda full, new: full.at[lvl].set(new),
-                               pwc, pwc_new)
-            need_mem_path = en & ~pwc_hit
-            caches, lat, p_l1h, p_mem = mem_path(
-                caches, line, q, is_pte=True,
-                bypass_l1=byp & need_mem_path, enabled=need_mem_path)
-            lvl_lat = jnp.where(pwc_hit, pwc_lat, lat)
-            lvl_lat = jnp.where(en, lvl_lat, 0.0)
-            walk_cyc = walk_cyc + jnp.where(is_par, 0.0, lvl_lat)
-            par_max = jnp.maximum(par_max, lvl_lat)
-            pte_acc += need_mem_path.astype(jnp.float32)
-            pte_l1h += p_l1h.astype(jnp.float32)
-            pte_mem_n += p_mem.astype(jnp.float32)
-        # parallel (ECH) walks: all probes issue simultaneously and the walk
-        # completes when the HITTING probe returns — one memory-access
+            en = walk & (lvl < eff_n) & pwc_on[mech, lvl]
+            sub["pwc"], h = access(sub["pwc"], shapes["pwc"],
+                                   pte_lines[lvl], en, stamp + 2 + lvl,
+                                   set_override=lvl)
+            pwc_hits.append(h)
+            bits.append(h)
+
+        data_line = vpn * 64 + off
+        lines = [pte_lines[lvl] for lvl in range(MAX_PTE)] + [data_line]
+        # enables at the top of the hierarchy; lower levels chain on miss
+        ens = [walk & (lvl < eff_n) & ~pwc_hits[lvl] & ~byp
+               for lvl in range(MAX_PTE)] + [valid]
+        for h_i, name in enumerate(hier):
+            slot = stamp + 2 + MAX_PTE + 5 * h_i
+            nxt = []
+            for i in range(5):
+                sub[name], h = access(sub[name], shapes[name], lines[i],
+                                      ens[i], slot + i)
+                nxt.append(ens[i] & ~h)
+                bits.append(h)
+            ens = nxt
+
+        packed = (jnp.stack(bits)
+                  * (1 << jnp.arange(n_bits, dtype=jnp.int32))).sum()
+        return sub, stamp + n_slots, packed
+
+    # inner vmap over mechanisms, outer over cores — every mapped input
+    # and output uses axis 0 so XLA never transposes the carried tables
+    per_core = jax.vmap(per_mc,
+                        in_axes=(0, 0, None, None, 0, None, None, 0))
+    full = jax.vmap(per_core,
+                    in_axes=(0, 0, 0, 0, 0, 0, None, None))
+    mech_ids = jnp.arange(m)
+
+    def step(carry, x):
+        sub, stamp = carry
+        vpn, off, pte_lines, is4k, valid = x
+        sub, stamp, packed = full(sub, stamp, vpn, off, pte_lines, is4k,
+                                  valid, mech_ids)
+        return (sub, stamp), packed
+
+    def epilogue(packed, work, is4k, valid, q):
+        """Vectorized timing over the whole chunk.
+
+        packed: (T, M, C) hit bits; work/is4k: (T, C); valid: (T,);
+        q: (M,) queue delay, constant within the chunk.  Re-derives the
+        same gates the scan used (pure functions of the hit bits) and
+        produces the (M, C) counter/clock deltas.
+        """
+        def bit(i):
+            return ((packed >> i) & 1).astype(bool)
+
+        validb = valid[:, None, None]                       # (T, 1, 1)
+        is4kb = is4k[:, None, :]                            # (T, 1, C)
+        idealb = ideal_tab[None, :, None]
+        hugeb = huge_tab[None, :, None]
+        bypb = bypass[None, :, None]
+        qb = q[None, :, None]
+
+        h_l1tlb, h_l2tlb = bit(0), bit(1)
+        en0 = validb & ~idealb
+        walk = en0 & ~h_l1tlb & ~h_l2tlb                    # (T, M, C)
+        eff_n = jnp.where(hugeb & is4kb, MAX_PTE, n_pte[None, :, None])
+
+        # hierarchy latency per line (pte0..3, data): chain the per-level
+        # hit bits top-down; a line that misses everywhere pays memory + q
+        lat = jnp.zeros(packed.shape + (5,), jnp.float32)
+        reached = jnp.ones(packed.shape + (5,), bool)
+        went_mem = jnp.ones(packed.shape + (5,), bool)
+        for h_i in range(len(hier)):
+            h = jnp.stack([bit(6 + 5 * h_i + i) for i in range(5)], -1)
+            lat = lat + jnp.where(reached, hier_lat[h_i], 0.0)
+            went_mem = went_mem & ~h
+            reached = reached & ~h
+        lat = lat + jnp.where(reached, mem_lat + qb[..., None], 0.0)
+
+        # per-PTE-level walk latency: PWC hit beats everything; NDPage
+        # bypass goes straight to memory; cached mechanisms pay the chain
+        pwc_hit = jnp.stack([bit(2 + lvl) for lvl in range(MAX_PTE)], -1)
+        pte_en = (walk[..., None]
+                  & (jnp.arange(MAX_PTE) < eff_n[..., None]))
+        need_mem = pte_en & ~pwc_hit
+        pte_lat = jnp.where(bypb[..., None], mem_lat + qb[..., None],
+                            lat[..., :MAX_PTE])
+        pte_lat = jnp.where(pwc_hit, pwc_lat, pte_lat)
+        pte_lat = jnp.where(pte_en, pte_lat, 0.0)
+
+        # parallel (ECH) walks: all probes issue simultaneously and the
+        # walk completes when the HITTING probe returns — one access
         # latency plus own-bank conflict + issue overhead.  The extra
         # probes only add traffic (counted in pte_mem -> queue pressure).
         # Multi-core: amortized cuckoo upsizing/rehash contention.
-        walk_cyc = jnp.where(is_par, par_max + 2.0 + ech_rehash, walk_cyc)
-        sub = dict(caches, pwc=pwc)
+        walk_cyc = jnp.where(parallel[None, :, None],
+                             pte_lat.max(-1) + 2.0 + ech_rehash,
+                             pte_lat.sum(-1))
 
-        trans = jnp.where(l1_hit | ideal, 0.0,
-                          l2tlb_lat + jnp.where(walk, walk_cyc, 0.0))
-        trans = trans + jnp.where(huge, promo, 0.0)
-        cnt["walk_cyc"] = jnp.where(walk, walk_cyc, 0.0)
-        cnt["pte_acc"] = pte_acc
-        cnt["pte_l1_hit"] = pte_l1h
-        cnt["pte_mem"] = pte_mem_n
-        cnt["trans"] = trans
+        trans = jnp.where(walk, walk_cyc, 0.0)
+        trans = jnp.where(en0 & ~h_l1tlb, l2tlb_lat + trans, 0.0)
+        trans = trans + jnp.where(hugeb & validb, promo, 0.0)
 
-        # ---- data access ----
-        data_line = vpn * 64 + off
-        sub2, dlat, d_l1h, d_mem = mem_path(
-            sub, data_line, q, is_pte=False,
-            bypass_l1=jnp.asarray(False), enabled=jnp.asarray(True))
-        cnt["data_l1_miss"] = (~d_l1h).astype(jnp.float32)
-        cnt["data_mem"] = d_mem.astype(jnp.float32)
+        pte_l1_hit = jnp.stack([bit(6 + i) for i in range(MAX_PTE)], -1)
+        pte_mem = jnp.where(need_mem,
+                            jnp.where(bypb[..., None], True,
+                                      went_mem[..., :MAX_PTE]), False)
+        data_mem = validb & went_mem[..., MAX_PTE]
+        dlat = jnp.where(validb, lat[..., MAX_PTE], 0.0)
 
-        step_cycles = work.astype(jnp.float32) + 1.0 + trans + (
-            dlat - l1_lat)
-        mem_n = pte_mem_n + d_mem.astype(jnp.float32)
-        return sub2, step_cycles, cnt, mem_n
+        step_cyc = jnp.where(
+            validb, work[:, None, :] + 1.0 + trans + (dlat - l1_lat), 0.0)
 
-    vmapped = jax.vmap(                       # over cores
-        jax.vmap(per_mech_core,               # over mechanisms
-                 in_axes=(0, None, None, None, 0, None, 0, 0)),
-        in_axes=(1, 0, 0, 0, 0, 0, None, None), out_axes=1)
-    # axes: state dicts have (M, C, ...) -> vmap C (axis 1) then M (axis 0)
+        f32 = lambda a: a.astype(jnp.float32).sum(axis=0)   # noqa: E731
+        cnt = {
+            "trans": trans.sum(axis=0),
+            "walks": f32(walk),
+            "walk_cyc": jnp.where(walk, walk_cyc, 0.0).sum(axis=0),
+            "l1tlb_miss": f32(en0 & ~h_l1tlb),
+            "pte_acc": need_mem.astype(jnp.float32).sum(axis=(0, -1)),
+            "pte_l1_hit": pte_l1_hit.astype(jnp.float32).sum(axis=(0, -1)),
+            "pte_mem": pte_mem.astype(jnp.float32).sum(axis=(0, -1)),
+            "data_l1_miss": f32(validb & ~bit(6 + MAX_PTE)),
+            "data_mem": f32(data_mem),
+        }
+        mem_n = (pte_mem.astype(jnp.float32).sum(axis=(0, -1))
+                 + data_mem.astype(jnp.float32).sum(axis=0))
+        return cnt, step_cyc.sum(axis=0), mem_n
 
-    def step(carry, x):
-        state = carry
-        vpn, off, work, pte_lines, is4k = x
-        # queue delay from aggregate measured memory demand (per mech).
+    return step, epilogue
+
+
+# ---------------------------------------------------------------------------
+# chunked driver
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _chunk_runner(mach: MachineConfig, names: Tuple[str, ...], chunk: int):
+    """One jitted (scan + epilogue) over a chunk, specialized per
+    (machine, mechanism tuple, chunk length) and cached for the life of
+    the process.  State buffers are donated: chunk i+1 reuses chunk i's
+    memory.  The per-mechanism PTE walk lines are derived from the VPNs
+    inside the jit so the host never materializes (T, C, M, MAX_PTE)."""
+    specs = specs_for(names)
+    step, epilogue = _build_model(mach, tables_for(names))
+    service = float(mach.mem_service)
+    table_names = tuple(_table_shapes(mach))
+
+    def walk_lines(vpn, is4k):
+        """(T, C) vpns -> (T, C, M, MAX_PTE) PTE line ids."""
+        radix = _pad_lines(PT.radix4_walk_lines(vpn))
+        per_mech = []
+        for s in specs:
+            if s.walk_fn is None:
+                lines = jnp.zeros_like(radix)
+            elif s.walk_fn is PT.radix4_walk_lines:
+                lines = radix
+            else:
+                lines = _pad_lines(s.walk_fn(vpn))
+            if s.huge:   # 4KB-fallback regions walk like radix (4 levels)
+                lines = jnp.where(is4k[..., None], radix, lines)
+            per_mech.append(lines)
+        return jnp.stack(per_mech, axis=2)
+
+    def run(state, xs):
+        vpn, off, work, is4k, valid = xs
+        pte = walk_lines(vpn, is4k)
+        # queue delay from aggregate demand measured so far (per mech).
         # Bounded-linear law: banked DRAM degrades gently up to saturation
-        # (an M/M/1 knee over-penalizes small traffic deltas at high load).
+        # (an M/M/1 knee over-penalizes small traffic deltas at high
+        # load).  Held constant within the chunk.
         elapsed = jnp.maximum(state["clock"].mean(axis=1), 1.0)   # (M,)
         rate = state["mem_accs"] / elapsed        # aggregate accesses/cycle
         rho = jnp.clip(rate * service, 0.0, 0.96)
         q = service * rho * QUEUE_K                                # (M,)
 
-        caches = {k: state[k] for k in state
-                  if k not in ("clock", "mem_accs", "counters")}
-        new_caches, cyc, cnt, mem_n = vmapped(
-            caches, vpn, off, work, pte_lines, is4k, q, jnp.arange(M))
-        new_state = dict(new_caches)
+        carry = ({k: state[k] for k in table_names}, state["stamp"])
+        (tabs, stamp), packed = jax.lax.scan(
+            step, carry, (vpn, off, pte, is4k, valid))
+        # scan emits (T, C, M); the cheap summary arrays go back to the
+        # public (T, M, C) orientation here
+        cnt, cyc, mem_n = epilogue(jnp.swapaxes(packed, 1, 2),
+                                   work, is4k, valid, q)
+
+        new_state = dict(tabs)
+        new_state["stamp"] = stamp
         new_state["clock"] = state["clock"] + cyc
         new_state["mem_accs"] = state["mem_accs"] + mem_n.sum(axis=1)
         new_state["counters"] = {
             k: state["counters"][k] + cnt[k] for k in state["counters"]}
-        return new_state, None
+        return new_state
 
-    return step
+    return jax.jit(run, donate_argnums=(0,))
 
 
-# ---------------------------------------------------------------------------
-# driver
-# ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=(0,))
-def _run(mach: MachineConfig, xs):
-    state = init_state(mach)
-    step = _make_step(mach)
-    state, _ = jax.lax.scan(step, state, xs)
-    return state
+# a spec re-registered with overwrite=True must not keep serving runners
+# compiled from the old MechTables/walk_fn
+_mechanisms.on_register(_chunk_runner.cache_clear)
 
 
 def simulate(mach: MachineConfig, trace: Dict[str, np.ndarray],
-             length: int | None = None) -> SimResult:
-    """Run all 5 mechanisms over a multi-core trace on ``mach``."""
+             length: int | None = None, *,
+             mechs: Tuple[str, ...] | None = None,
+             chunk: int = DEFAULT_CHUNK) -> SimResult:
+    """Run the registered mechanisms over a multi-core trace on ``mach``.
+
+    ``mechs`` selects/orders mechanisms from the spec registry (default:
+    the paper's five).  The trace is zero-padded to a multiple of
+    ``chunk`` (padding is masked out of every counter) and streamed
+    through the cached chunk runner.
+    """
+    names = DEFAULT_MECHS if mechs is None else tuple(mechs)
+    m = len(specs_for(names))
+
     vpn = trace["vpn"][:, :length] if length else trace["vpn"]
     off = trace["off"][:, : vpn.shape[1]]
     work = trace["work"][:, : vpn.shape[1]]
     c, t = vpn.shape
     assert c == mach.num_cores, (c, mach.num_cores)
 
-    # precompute PTE lines per mechanism: (T, C, M, 4)
-    vj = jnp.asarray(vpn.T)                       # (T, C)
-    walks = {
-        "radix": PT.radix4_walk_lines(vj),
-        "ech": ech_pad(PT.ech_probe_lines(vj)),
-        "hugepage": ech_pad(PT.hugepage_walk_lines(vj)),
-        "ndpage": ech_pad(PT.ndpage_walk_lines(vj)),
-    }
-    # hugepage 4KB-fallback regions ALSO need radix lines; reuse radix's
-    pte = jnp.stack([walks["radix"], walks["ech"], walks["hugepage"],
-                     walks["ndpage"], jnp.zeros_like(walks["radix"])],
-                    axis=2)                       # (T, C, M, 4)
-    # hugepage fallback pages: where is4k, walk radix lines
+    # huge-page fragmentation: which 2MB regions fell back to 4KB mappings
     frac = FRAC_4K.get(mach.num_cores, min(0.93, 0.05 + 0.11 *
                                            mach.num_cores))
     region = vpn >> HUGE_SHIFT
     is4k_np = (_hash_np(region) % 1000) < int(frac * 1000)
-    is4k = jnp.asarray(is4k_np.T)                 # (T, C)
-    pte = pte.at[:, :, HUGE_IDX, :].set(
-        jnp.where(is4k[..., None], walks["radix"], pte[:, :, HUGE_IDX, :]))
 
-    xs = (vj.astype(jnp.int32), jnp.asarray(off.T), jnp.asarray(work.T),
-          pte.astype(jnp.int32), is4k)
-    state = jax.block_until_ready(_run(mach, xs))
+    pad = (-t) % chunk
+    pad_np = lambda a: np.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))  # noqa: E731
+    valid = np.arange(t + pad) < t
+    xs = (pad_np(np.ascontiguousarray(vpn.T, np.int32)),
+          pad_np(np.ascontiguousarray(off.T, np.int32)),
+          pad_np(np.ascontiguousarray(work.T, np.float32)),
+          pad_np(np.ascontiguousarray(is4k_np.T)),
+          valid)
+    xs = tuple(jnp.asarray(a) for a in xs)
+
+    runner = _chunk_runner(mach, names, chunk)
+    state = init_state(mach, m)
+    for i in range(0, t + pad, chunk):
+        state = runner(state, jax.tree.map(lambda a: a[i:i + chunk], xs))
+    state = jax.block_until_ready(state)
 
     cnt = {k: np.asarray(v) for k, v in state["counters"].items()}
     return SimResult(
-        mechs=MECHS,
+        mechs=names,
         cycles=np.asarray(state["clock"]),
         instructions=np.asarray((work + 1).sum(axis=1), np.float64),
         trans_cycles=cnt["trans"],
@@ -381,8 +507,8 @@ def simulate(mach: MachineConfig, trace: Dict[str, np.ndarray],
     )
 
 
-def ech_pad(a: jnp.ndarray) -> jnp.ndarray:
-    """Pad (T, C, 3) walk lines to (T, C, 4)."""
+def _pad_lines(a: jnp.ndarray) -> jnp.ndarray:
+    """Pad (T, C, d) walk lines to (T, C, MAX_PTE)."""
     pad = [(0, 0)] * (a.ndim - 1) + [(0, MAX_PTE - a.shape[-1])]
     return jnp.pad(a, pad)
 

@@ -186,17 +186,33 @@ TRACE_PATTERNS = {
 }
 
 
-def generate_trace(workload: str, num_cores: int, length: int,
-                   seed: int = 0) -> Dict[str, np.ndarray]:
+def generate_trace(workload: str, num_cores: int, length: int | None = None,
+                   seed: int | None = None,
+                   preset=None) -> Dict[str, np.ndarray]:
     """Per-core traces for a Table-II workload.
 
     Returns dict with vpn/off/work arrays of shape (num_cores, length).
     All cores share the dataset (same footprint region, different seeds).
+
+    ``preset`` is a :class:`repro.configs.ndp_sim.SimPreset` (or its name,
+    e.g. ``"smoke"``) supplying defaults for ``length`` and ``seed`` and
+    scaling the Table-II footprint; explicit ``length``/``seed`` win.
     """
-    from repro.configs.ndp_sim import WORKLOADS
+    from repro.configs.ndp_sim import PRESETS, WORKLOADS
+    scale = 1.0
+    if preset is not None:
+        if isinstance(preset, str):
+            preset = PRESETS[preset]
+        length = preset.trace_len if length is None else length
+        seed = preset.seed if seed is None else seed
+        scale = preset.footprint_scale
+    if length is None:
+        raise TypeError("generate_trace needs `length` or a `preset`")
+    if seed is None:
+        seed = 0
     spec = WORKLOADS[workload]
     pattern = TRACE_PATTERNS[spec["pattern"]]
-    pages = _pages(spec["footprint_gb"])
+    pages = _pages(spec["footprint_gb"] * scale)
     vpns, offs, works = [], [], []
     for c in range(num_cores):
         rng = np.random.default_rng(seed * 1009 + c * 101 + hash(workload)

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="install requirements-dev.txt for the property-test lane")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import block_table as BT
 from repro.core.kv_page_manager import KVPageManager

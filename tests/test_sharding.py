@@ -52,8 +52,11 @@ MINI_DRYRUN = textwrap.dedent("""
         lowered = D.lower_train(cfg, shape, mesh)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):       # pre-0.4.3x jax returns [dict]
+            ca = ca[0] if ca else {}
         out[arch] = {"temp": mem.temp_size_in_bytes,
-                     "flops": compiled.cost_analysis().get("flops", 0)}
+                     "flops": ca.get("flops", 0)}
     dshape = dataclasses.replace(C.SHAPES["decode_32k"], global_batch=8,
                                  seq_len=256)
     cfg = C.smoke_variant(C.get_arch("internlm2-1.8b"))

@@ -1,5 +1,4 @@
 """Simulator unit + behaviour tests (cache model, mechanisms ordering)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -50,10 +49,12 @@ class TestCacheModel:
 
 
 class TestSimulator:
+    """Behavioural checks on the smoke preset — the same engine code path
+    as full runs (chunked scan, spec registry) at CI-compatible cost."""
+
     @pytest.fixture(scope="class")
-    def result(self):
-        trace = generate_trace("rnd", 2, 3000, seed=0)
-        return simulate(ndp_machine(2), trace)
+    def result(self, smoke_sim):
+        return smoke_sim("rnd", ndp_machine(2))
 
     def test_ideal_is_fastest(self, result):
         sp = result.speedup_vs()
@@ -75,9 +76,19 @@ class TestSimulator:
         assert (result.walks <= result.l1tlb_misses + 1e-6).all()
         assert (result.trans_cycles <= result.cycles).all()
 
-    def test_cpu_less_translation_bound_than_ndp(self):
-        trace = generate_trace("bfs", 2, 3000, seed=1)
-        ndp = simulate(ndp_machine(2), trace)
-        cpu = simulate(cpu_machine(2), trace)
+    def test_cpu_less_translation_bound_than_ndp(self, smoke_sim):
+        ndp = smoke_sim("bfs", ndp_machine(2))
+        cpu = smoke_sim("bfs", cpu_machine(2))
         assert (cpu.translation_fraction()[0]
                 < ndp.translation_fraction()[0])
+
+    def test_chunk_padding_invariance(self, smoke):
+        # a padded single-chunk run must match an exact-fit single-chunk
+        # run entry for entry (both see one queue window, so the only
+        # difference is the padding mask)
+        trace = generate_trace("rnd", 1, 700, seed=3, preset=smoke)
+        exact = simulate(ndp_machine(1), trace, chunk=700)
+        padded = simulate(ndp_machine(1), trace, chunk=1024)
+        np.testing.assert_allclose(exact.cycles, padded.cycles, rtol=1e-6)
+        np.testing.assert_array_equal(exact.walks, padded.walks)
+        assert exact.accesses == padded.accesses == 700

@@ -48,6 +48,7 @@ class TestServingTransparency:
     """NDPage's serving analogue is SOFTWARE-TRANSPARENT: flat vs radix vs
     dense caches produce identical generations."""
 
+    @pytest.mark.slow
     def test_all_kv_modes_generate_identically(self):
         cfg = dataclasses.replace(
             smoke_variant(get_arch("granite-moe-1b-a400m")),
@@ -61,6 +62,7 @@ class TestServingTransparency:
 
 
 class TestEndToEnd:
+    @pytest.mark.slow
     def test_train_then_serve(self, tmp_path):
         """Train a smoke model briefly, checkpoint, reload, serve it."""
         from repro.train.checkpoint import restore, save
