@@ -28,6 +28,20 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
+def _setup_host_devices() -> None:
+    """Honour SIM_DEVICES=N: expose N XLA host devices so simulate_batch
+    can shard its B axis.  Must run before any jax backend initialization
+    — that is why it lives here and not inside the library."""
+    n = os.environ.get("SIM_DEVICES")
+    if not n or int(n) <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={int(n)}"
+        ).strip()
+
+
 def _setup_jax_cache() -> None:
     """Persist XLA binaries so repeat benchmark runs skip compilation."""
     cache = os.environ.get(
@@ -50,6 +64,7 @@ def main(argv=None) -> None:
     if args.fast:
         os.environ["SIM_FIGS_FAST"] = "1"
 
+    _setup_host_devices()
     _setup_jax_cache()
     t0 = time.time()
     from benchmarks import sim_figures

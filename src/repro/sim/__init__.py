@@ -9,4 +9,5 @@ simultaneously along a leading "mechanism" axis — the paper's five
 """
 from repro.sim.mechanisms import (DEFAULT_MECHS, MechanismSpec,  # noqa: F401
                                   register)
-from repro.sim.simulator import SimResult, simulate  # noqa: F401
+from repro.sim.simulator import (SimResult, simulate,  # noqa: F401
+                                 simulate_batch)

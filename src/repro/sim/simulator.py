@@ -41,16 +41,41 @@ The runner is compiled once per (MachineConfig, mechanism tuple, chunk
 length) — trace length never retriggers compilation.  The queueing delay
 is held constant within a chunk (recomputed from aggregate demand at
 every chunk boundary), which is what makes the split exact.
+
+Batch axis
+----------
+:func:`simulate_batch` adds a batch axis over B *independent
+simulations* that share one ``MachineConfig`` shape (e.g. all Table-II
+workloads at a given machine × core count): the whole bucket runs as ONE
+chunked-scan dispatch.  LRU tables are laid out ``(B, C, M, sets,
+ways)`` — every mapped axis stays leading, so no per-step transpose is
+ever materialized (the same rule that drove the (C, M) layout) — and
+are reshaped (free: the leading axes are contiguous) onto the fused
+``(B*C, M, sets, ways)`` lane layout at dispatch: independent sims are
+exactly the proven two-level engine with a wider lane axis, which
+XLA-CPU runs at full width, whereas a literal third vmap level regresses
+the per-step gathers ~2x.  Per-sim queue windows, valid masks (lanes may
+have different true trace lengths), and counters stay per-sim and are
+sliced back into per-sim :class:`SimResult` objects at the end; results
+are bit-exact vs per-sim :func:`simulate` — lanes never interact.
+When more than one XLA host device is available (opt-in via
+``SIM_DEVICES=N`` before process start, which forces
+``--xla_force_host_platform_device_count``), the B axis is sharded
+across devices with ``jax.sharding`` — lanes never communicate, so the
+fleet parallelizes embarrassingly.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+import os
+import time
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.ndp_sim import MachineConfig
 from repro.core import page_table as PT
@@ -131,6 +156,45 @@ class SimResult:
     def data_l1_miss_rate(self) -> np.ndarray:
         return (self.data_l1_misses / self.accesses).mean(axis=1)
 
+    # -- slicing helpers ----------------------------------------------------
+    def select(self, mechs: Sequence[str] | str | None = None,
+               cores: Sequence[int] | slice | int | None = None
+               ) -> "SimResult":
+        """Sub-view of the result restricted to ``mechs`` (names, order
+        preserved as given) and/or ``cores`` (index/slice/sequence) — the
+        figure code uses this instead of raw positional numpy indexing."""
+        if isinstance(mechs, str):
+            mechs = (mechs,)
+        names = self.mechs if mechs is None else tuple(mechs)
+        mi = np.asarray([self.mechs.index(n) for n in names])
+        if cores is None:
+            ci = np.arange(self.cycles.shape[1])
+        elif isinstance(cores, slice):
+            ci = np.arange(self.cycles.shape[1])[cores]
+        else:
+            ci = np.atleast_1d(np.asarray(cores))
+        mc = lambda a: a[np.ix_(mi, ci)]                     # noqa: E731
+        return SimResult(
+            mechs=names,
+            cycles=mc(self.cycles),
+            instructions=self.instructions[ci],
+            trans_cycles=mc(self.trans_cycles),
+            walk_cycles=mc(self.walk_cycles),
+            walks=mc(self.walks),
+            l1tlb_misses=mc(self.l1tlb_misses),
+            accesses=self.accesses,
+            pte_accesses=mc(self.pte_accesses),
+            pte_l1_hits=mc(self.pte_l1_hits),
+            pte_mem=mc(self.pte_mem),
+            data_l1_misses=mc(self.data_l1_misses),
+            data_mem=mc(self.data_mem),
+        )
+
+    def scalar(self, metric: str, mech: str) -> float:
+        """One derived metric for one mechanism, as a plain float:
+        ``res.scalar("avg_ptw_latency", "radix")``."""
+        return getattr(self.select(mechs=(mech,)), metric)().item()
+
 
 # ---------------------------------------------------------------------------
 # state construction
@@ -152,21 +216,24 @@ def _table_shapes(mach: MachineConfig) -> Dict[str, Tuple[int, int]]:
     return shapes
 
 
-def init_state(mach: MachineConfig, m: int = M):
+def init_state(mach: MachineConfig, m: int = M, batch: int | None = None):
     c = mach.num_cores
+    # batch=None: one simulation, tables (C, M, sets, ways).  batch=B:
+    # B independent sims, tables (B, C, M, sets, ways).  Either way every
+    # vmap level maps axis 0 with axis-0 outputs, so no per-step
+    # transpose (= full table copy) is ever materialized.  Public results
+    # stay (M, C) per sim.
+    lead = () if batch is None else (batch,)
 
-    # tables are laid out (C, M, sets, ways): both vmap levels then map
-    # axis 0 with axis-0 outputs, so no per-step transpose (= full table
-    # copy) is ever materialized.  Public results stay (M, C).
     def table(sets, ways):
-        return {"tags": jnp.zeros((c, m, sets, ways), jnp.int32),
-                "lru": jnp.zeros((c, m, sets, ways), jnp.int32)}
+        return {"tags": jnp.zeros(lead + (c, m, sets, ways), jnp.int32),
+                "lru": jnp.zeros(lead + (c, m, sets, ways), jnp.int32)}
 
     st = {name: table(*shape) for name, shape in _table_shapes(mach).items()}
-    st["stamp"] = jnp.zeros((c, m), jnp.int32)
-    st["clock"] = jnp.zeros((m, c), jnp.float32)
-    st["mem_accs"] = jnp.zeros((m,), jnp.float32)
-    st["counters"] = {k: jnp.zeros((m, c), jnp.float32)
+    st["stamp"] = jnp.zeros(lead + (c, m), jnp.int32)
+    st["clock"] = jnp.zeros(lead + (m, c), jnp.float32)
+    st["mem_accs"] = jnp.zeros(lead + (m,), jnp.float32)
+    st["counters"] = {k: jnp.zeros(lead + (m, c), jnp.float32)
                       for k in ("trans", "walks", "walk_cyc", "l1tlb_miss",
                                 "pte_acc", "pte_l1_hit", "pte_mem",
                                 "data_l1_miss", "data_mem")}
@@ -176,7 +243,8 @@ def init_state(mach: MachineConfig, m: int = M):
 # ---------------------------------------------------------------------------
 # the model: sequential hit extraction + vectorized timing
 # ---------------------------------------------------------------------------
-def _build_model(mach: MachineConfig, tables: MechTables):
+def _build_model(mach: MachineConfig, tables: MechTables,
+                 batched: bool = False):
     m = tables.num_mechs
     is_cpu = mach.l2 is not None
     hier = ("l1", "l2", "l3") if is_cpu else ("l1",)
@@ -278,37 +346,49 @@ def _build_model(mach: MachineConfig, tables: MechTables):
         return sub, stamp + n_slots, packed
 
     # inner vmap over mechanisms, outer over cores — every mapped input
-    # and output uses axis 0 so XLA never transposes the carried tables
+    # and output uses axis 0 so XLA never transposes the carried tables.
+    # The batched variant serves the B (independent-simulation) axis
+    # FUSED into the core axis: lanes are fully independent either way,
+    # and a wider leading axis is the layout XLA-CPU already handles
+    # well, whereas a literal third vmap level regresses the per-step
+    # gathers.  Only ``valid`` changes: per-sim trace lengths make it a
+    # per-lane input instead of a step-wide scalar.
     per_core = jax.vmap(per_mc,
                         in_axes=(0, 0, None, None, 0, None, None, 0))
     full = jax.vmap(per_core,
                     in_axes=(0, 0, 0, 0, 0, 0, None, None))
+    full_v = jax.vmap(per_core,
+                      in_axes=(0, 0, 0, 0, 0, 0, 0, None))
     mech_ids = jnp.arange(m)
 
     def step(carry, x):
         sub, stamp = carry
         vpn, off, pte_lines, is4k, valid = x
-        sub, stamp, packed = full(sub, stamp, vpn, off, pte_lines, is4k,
-                                  valid, mech_ids)
+        fn = full_v if batched else full
+        sub, stamp, packed = fn(sub, stamp, vpn, off, pte_lines, is4k,
+                                valid, mech_ids)
         return (sub, stamp), packed
 
     def epilogue(packed, work, is4k, valid, q):
         """Vectorized timing over the whole chunk.
 
-        packed: (T, M, C) hit bits; work/is4k: (T, C); valid: (T,);
-        q: (M,) queue delay, constant within the chunk.  Re-derives the
-        same gates the scan used (pure functions of the hit bits) and
-        produces the (M, C) counter/clock deltas.
+        packed: (T, M, C) hit bits; work/is4k: (T, C); valid: (T,) — or
+        (T, C) per-lane in the batched engine, where C is the fused
+        B*cores axis; q: (M,) queue delay — (M, C) when batched (per-sim
+        windows expanded per lane) — constant within the chunk.
+        Re-derives the same gates the scan used (pure functions of the
+        hit bits) and produces the (M, C) counter/clock deltas.
         """
         def bit(i):
             return ((packed >> i) & 1).astype(bool)
 
-        validb = valid[:, None, None]                       # (T, 1, 1)
+        validb = (valid[:, None, None] if valid.ndim == 1
+                  else valid[:, None, :])                   # (T, 1, 1|C)
         is4kb = is4k[:, None, :]                            # (T, 1, C)
         idealb = ideal_tab[None, :, None]
         hugeb = huge_tab[None, :, None]
         bypb = bypass[None, :, None]
-        qb = q[None, :, None]
+        qb = q[None, :, None] if q.ndim == 1 else q[None]   # (1, M, 1|C)
 
         h_l1tlb, h_l2tlb = bit(0), bit(1)
         en0 = validb & ~idealb
@@ -361,6 +441,12 @@ def _build_model(mach: MachineConfig, tables: MechTables):
         step_cyc = jnp.where(
             validb, work[:, None, :] + 1.0 + trans + (dlat - l1_lat), 0.0)
 
+        # NB: XLA-CPU's axis-0 reduce keeps one association for every
+        # lane width except 1 (rank-collapse special case), so these f32
+        # sums are bit-stable between batch and single dispatch as long
+        # as the lane minor-dim stays >= 2 — which simulate/simulate_batch
+        # guarantee by padding 1-lane runs (integer-valued counters are
+        # order-exact regardless).  tests/test_batch.py pins this.
         f32 = lambda a: a.astype(jnp.float32).sum(axis=0)   # noqa: E731
         cnt = {
             "trans": trans.sum(axis=0),
@@ -384,19 +470,25 @@ def _build_model(mach: MachineConfig, tables: MechTables):
 # chunked driver
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _chunk_runner(mach: MachineConfig, names: Tuple[str, ...], chunk: int):
+def _chunk_runner(mach: MachineConfig, names: Tuple[str, ...], chunk: int,
+                  batch: bool = False):
     """One jitted (scan + epilogue) over a chunk, specialized per
     (machine, mechanism tuple, chunk length) and cached for the life of
     the process.  State buffers are donated: chunk i+1 reuses chunk i's
     memory.  The per-mechanism PTE walk lines are derived from the VPNs
-    inside the jit so the host never materializes (T, C, M, MAX_PTE)."""
+    inside the jit so the host never materializes (T, C, M, MAX_PTE).
+
+    ``batch=True`` builds the B-axis variant: xs arrive as (T, B, C)
+    (valid: (T, B)), state carries a leading B, and the queue window is
+    tracked per sim.  One jitted callable serves every B (jit re-traces
+    per shape) and every sharding of the B axis."""
     specs = specs_for(names)
-    step, epilogue = _build_model(mach, tables_for(names))
+    step, epilogue = _build_model(mach, tables_for(names), batched=batch)
     service = float(mach.mem_service)
     table_names = tuple(_table_shapes(mach))
 
     def walk_lines(vpn, is4k):
-        """(T, C) vpns -> (T, C, M, MAX_PTE) PTE line ids."""
+        """(..., C) vpns -> (..., C, M, MAX_PTE) PTE line ids."""
         radix = _pad_lines(PT.radix4_walk_lines(vpn))
         per_mech = []
         for s in specs:
@@ -409,20 +501,22 @@ def _chunk_runner(mach: MachineConfig, names: Tuple[str, ...], chunk: int):
             if s.huge:   # 4KB-fallback regions walk like radix (4 levels)
                 lines = jnp.where(is4k[..., None], radix, lines)
             per_mech.append(lines)
-        return jnp.stack(per_mech, axis=2)
+        return jnp.stack(per_mech, axis=-2)
+
+    def _queue(clock, mem_accs):
+        # queue delay from aggregate demand measured so far (per mech,
+        # per sim).  Bounded-linear law: banked DRAM degrades gently up
+        # to saturation (an M/M/1 knee over-penalizes small traffic
+        # deltas at high load).  Held constant within the chunk.
+        elapsed = jnp.maximum(clock.mean(axis=-1), 1.0)
+        rate = mem_accs / elapsed                 # aggregate accesses/cycle
+        rho = jnp.clip(rate * service, 0.0, 0.96)
+        return service * rho * QUEUE_K            # (M,) / batched (B, M)
 
     def run(state, xs):
         vpn, off, work, is4k, valid = xs
         pte = walk_lines(vpn, is4k)
-        # queue delay from aggregate demand measured so far (per mech).
-        # Bounded-linear law: banked DRAM degrades gently up to saturation
-        # (an M/M/1 knee over-penalizes small traffic deltas at high
-        # load).  Held constant within the chunk.
-        elapsed = jnp.maximum(state["clock"].mean(axis=1), 1.0)   # (M,)
-        rate = state["mem_accs"] / elapsed        # aggregate accesses/cycle
-        rho = jnp.clip(rate * service, 0.0, 0.96)
-        q = service * rho * QUEUE_K                                # (M,)
-
+        q = _queue(state["clock"], state["mem_accs"])          # (M,)
         carry = ({k: state[k] for k in table_names}, state["stamp"])
         (tabs, stamp), packed = jax.lax.scan(
             step, carry, (vpn, off, pte, is4k, valid))
@@ -439,7 +533,46 @@ def _chunk_runner(mach: MachineConfig, names: Tuple[str, ...], chunk: int):
             k: state["counters"][k] + cnt[k] for k in state["counters"]}
         return new_state
 
-    return jax.jit(run, donate_argnums=(0,))
+    m = len(specs)
+
+    def run_batch(state, xs):
+        """B sims as one dispatch.  State arrives (B, C, M, ...) and is
+        reshaped — free, the leading axes are contiguous — onto the
+        fused (B*C, M, ...) lane layout the proven two-level engine
+        runs; only valid bits and queue windows are expanded per lane.
+        Public counters stay per-sim (B, M, C)."""
+        vpn, off, work, is4k, valid = xs          # (T, B, C); valid (T, B)
+        t, b, c = vpn.shape
+        fuse = lambda a: a.reshape((t, b * c) + a.shape[3:])   # noqa: E731
+        vpn, off, work, is4k = (fuse(a) for a in (vpn, off, work, is4k))
+        valid = jnp.repeat(valid, c, axis=1)      # (T, B*C)
+        pte = walk_lines(vpn, is4k)
+        q = _queue(state["clock"], state["mem_accs"])          # (B, M)
+        q_lane = jnp.repeat(q.T, c, axis=1)       # (M, B*C)
+
+        carry = (jax.tree.map(lambda a: a.reshape((b * c,) + a.shape[2:]),
+                              {k: state[k] for k in table_names}),
+                 state["stamp"].reshape(b * c, m))
+        (tabs, stamp), packed = jax.lax.scan(
+            step, carry, (vpn, off, pte, is4k, valid))
+        cnt, cyc, mem_n = epilogue(jnp.swapaxes(packed, 1, 2),
+                                   work, is4k, valid, q_lane)
+
+        def unfuse_mc(a):                          # (M, B*C) -> (B, M, C)
+            return jnp.moveaxis(a.reshape(a.shape[0], b, c), 1, 0)
+
+        new_state = jax.tree.map(
+            lambda a: a.reshape((b, c) + a.shape[1:]), tabs)
+        new_state["stamp"] = stamp.reshape(b, c, m)
+        new_state["clock"] = state["clock"] + unfuse_mc(cyc)
+        new_state["mem_accs"] = (state["mem_accs"]
+                                 + unfuse_mc(mem_n).sum(axis=-1))
+        new_state["counters"] = {
+            k: state["counters"][k] + unfuse_mc(cnt[k])
+            for k in state["counters"]}
+        return new_state
+
+    return jax.jit(run_batch if batch else run, donate_argnums=(0,))
 
 
 # a spec re-registered with overwrite=True must not keep serving runners
@@ -459,8 +592,26 @@ def simulate(mach: MachineConfig, trace: Dict[str, np.ndarray],
     through the cached chunk runner.
     """
     names = DEFAULT_MECHS if mechs is None else tuple(mechs)
-    m = len(specs_for(names))
 
+    if mach.num_cores == 1:
+        # run 1-core sims on the batch engine (padded to 2 lanes there):
+        # a single lane would hit XLA's width-1 reduce special case,
+        # whose float accumulation order differs from every width >= 2 —
+        # breaking batch-vs-single bit-exactness
+        return simulate_batch(mach, [trace], length, mechs=names,
+                              chunk=chunk, devices=1)[0]
+    return _simulate_single(mach, trace, length, names, chunk)
+
+
+def _simulate_single(mach: MachineConfig, trace: Dict[str, np.ndarray],
+                     length: int | None, names: Tuple[str, ...],
+                     chunk: int) -> SimResult:
+    """The non-batched engine — every core count runs here via
+    :func:`simulate` except C=1 (rerouted, see above).  The batch tests
+    also drive this directly as an independent oracle (to float
+    tolerance at C=1, where the rerouting makes exactness impossible).
+    """
+    m = len(specs_for(names))
     vpn = trace["vpn"][:, :length] if length else trace["vpn"]
     off = trace["off"][:, : vpn.shape[1]]
     work = trace["work"][:, : vpn.shape[1]]
@@ -505,6 +656,123 @@ def simulate(mach: MachineConfig, trace: Dict[str, np.ndarray],
         data_l1_misses=cnt["data_l1_miss"],
         data_mem=cnt["data_mem"],
     )
+
+
+def simulate_batch(mach: MachineConfig,
+                   traces: Sequence[Dict[str, np.ndarray]],
+                   length: int | None = None, *,
+                   mechs: Tuple[str, ...] | None = None,
+                   chunk: int = DEFAULT_CHUNK,
+                   devices: int | None = None,
+                   timings: Dict | None = None) -> List[SimResult]:
+    """Run B independent simulations sharing ``mach``'s shape as ONE
+    batched chunked-scan dispatch.
+
+    ``traces`` is a sequence of trace dicts (each ``(num_cores, T_i)``);
+    lanes with shorter traces are masked with per-sim valid bits, so
+    mixed-length buckets are fine.  Results are bit-exact vs calling
+    :func:`simulate` per trace — state is laid out ``(B, C, M, sets,
+    ways)`` and fused to a wider lane axis at dispatch; lanes never
+    interact.
+
+    ``devices`` shards the B axis over that many XLA devices (default:
+    all of them when ``SIM_DEVICES`` forced multiple host devices,
+    else 1); B is padded to a device multiple with all-invalid lanes.
+    ``timings``, if given, is filled with wall clock for the benchmark
+    drivers: "total_s", "compile_s_est" (first-chunk excess over the
+    steady per-chunk rate), "run_s" (= total - compile estimate), and
+    "chunks".
+    """
+    names = DEFAULT_MECHS if mechs is None else tuple(mechs)
+    m = len(specs_for(names))
+    c = mach.num_cores
+
+    vpns, offs, works, lens = [], [], [], []
+    for tr in traces:
+        vpn = tr["vpn"][:, :length] if length else tr["vpn"]
+        assert vpn.shape[0] == c, (vpn.shape[0], c)
+        vpns.append(vpn)
+        offs.append(tr["off"][:, : vpn.shape[1]])
+        works.append(tr["work"][:, : vpn.shape[1]])
+        lens.append(vpn.shape[1])
+    b = len(traces)
+    if b == 0:
+        return []
+    t_pad = max(lens) + (-max(lens)) % chunk
+
+    ndev = devices
+    if ndev is None:
+        ndev = len(jax.devices()) if os.environ.get("SIM_DEVICES") else 1
+    ndev = max(1, min(ndev, len(jax.devices()), b))
+    bp = b + (-b) % ndev                 # pad B to a device multiple
+    if bp * c < 2:
+        bp = 2      # keep the fused lane axis >= 2 wide: XLA's width-1
+        #             reduce reassociates (see epilogue comment)
+
+    def pack(arrs, dtype):
+        out = np.zeros((t_pad, bp, c), dtype)
+        for i, a in enumerate(arrs):
+            out[: lens[i], i] = np.ascontiguousarray(a.T)
+        return out
+
+    # huge-page fragmentation: which 2MB regions fell back to 4KB
+    frac = FRAC_4K.get(mach.num_cores, min(0.93, 0.05 + 0.11 *
+                                           mach.num_cores))
+    is4ks = [(_hash_np(v >> HUGE_SHIFT) % 1000) < int(frac * 1000)
+             for v in vpns]
+    valid = np.zeros((t_pad, bp), bool)
+    for i, n in enumerate(lens):
+        valid[:n, i] = True
+    xs = (pack(vpns, np.int32), pack(offs, np.int32),
+          pack(works, np.float32), pack(is4ks, bool), valid)
+    xs = tuple(jnp.asarray(a) for a in xs)
+
+    state = init_state(mach, m, batch=bp)
+    if ndev > 1:
+        mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("b",))
+        st_sh = NamedSharding(mesh, P("b"))    # state: B leading everywhere
+        xs_sh = NamedSharding(mesh, P(None, "b"))   # xs: (T, B, ...)
+        state = jax.tree.map(lambda a: jax.device_put(a, st_sh), state)
+        xs = tuple(jax.device_put(a, xs_sh) for a in xs)
+
+    runner = _chunk_runner(mach, names, chunk, batch=True)
+    n_chunks = t_pad // chunk
+    t0 = time.perf_counter()
+    t_first = 0.0
+    for k, i in enumerate(range(0, t_pad, chunk)):
+        state = runner(state, jax.tree.map(lambda a: a[i:i + chunk], xs))
+        if timings is not None and k == 0:
+            # one extra sync: the first chunk carries trace+compile cost,
+            # later chunks stay pipelined (async dispatch)
+            jax.block_until_ready(state)
+            t_first = time.perf_counter() - t0
+    state = jax.block_until_ready(state)
+    if timings is not None:
+        total = time.perf_counter() - t0
+        steady = ((total - t_first) / (n_chunks - 1)
+                  if n_chunks > 1 else 0.0)
+        timings["chunks"] = n_chunks
+        timings["total_s"] = total
+        timings["compile_s_est"] = max(0.0, t_first - steady)
+        timings["run_s"] = total - timings["compile_s_est"]
+
+    cnt = {k: np.asarray(v) for k, v in state["counters"].items()}
+    clock = np.asarray(state["clock"])
+    return [SimResult(
+        mechs=names,
+        cycles=clock[i],
+        instructions=np.asarray((works[i] + 1).sum(axis=1), np.float64),
+        trans_cycles=cnt["trans"][i],
+        walk_cycles=cnt["walk_cyc"][i],
+        walks=cnt["walks"][i],
+        l1tlb_misses=cnt["l1tlb_miss"][i],
+        accesses=lens[i],
+        pte_accesses=cnt["pte_acc"][i],
+        pte_l1_hits=cnt["pte_l1_hit"][i],
+        pte_mem=cnt["pte_mem"][i],
+        data_l1_misses=cnt["data_l1_miss"][i],
+        data_mem=cnt["data_mem"][i],
+    ) for i in range(b)]
 
 
 def _pad_lines(a: jnp.ndarray) -> jnp.ndarray:

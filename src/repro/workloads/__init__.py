@@ -1,1 +1,3 @@
-from repro.workloads.generators import generate_trace, TRACE_PATTERNS  # noqa: F401
+from repro.workloads.generators import (TRACE_PATTERNS,  # noqa: F401
+                                        generate_trace, generate_traces,
+                                        trace_cache_dir)

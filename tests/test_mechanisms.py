@@ -108,4 +108,4 @@ class TestSmokeRegression:
 #   r = simulate(ndp_machine(8), generate_trace('rnd', 8, preset=p),
 #                chunk=p.chunk)
 #   print(r.cycles.mean(axis=1).tolist())"
-PINNED_SMOKE_RND_8C = [1834128.5, 1702291.5, 2008161.0, 1330099.5, 651847.4]
+PINNED_SMOKE_RND_8C = [1833050.8, 1702481.0, 2007893.8, 1330220.8, 651822.1]
