@@ -60,6 +60,9 @@ def main(argv=None) -> None:
                    help="smoke-preset simulator figures (sub-minute)")
     p.add_argument("--sim-only", action="store_true",
                    help="skip the kernel microbenches")
+    p.add_argument("--sweeps", action="store_true",
+                   help="also run the sensitivity sweeps "
+                        "(benchmarks/sim_sweep.py)")
     args = p.parse_args(argv)
     if args.fast:
         os.environ["SIM_FIGS_FAST"] = "1"
@@ -104,6 +107,21 @@ def main(argv=None) -> None:
     print(f"# wrote {os.path.join(root, 'bench_results.json')}")
     print(f"# wrote {os.path.join(root, 'BENCH_sim.json')} "
           f"(figures wall {sim_wall:.1f}s)")
+
+    if args.sweeps:
+        # sensitivity sweeps append their section to BENCH_sim.json
+        from benchmarks import sim_sweep
+        fast = args.fast or bool(int(os.environ.get("SIM_FIGS_FAST", "0")))
+        srows, ssummary = sim_sweep.run_sweeps(list(sim_sweep._HANDLERS),
+                                               fast=fast)
+        for name, us, derived in srows:
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        sim_sweep.merge_into_bench_json(
+            ssummary, os.path.join(root, "BENCH_sim.json"))
+        failed = sim_sweep.failed_checks(ssummary)
+        if failed:
+            sys.exit(f"sweep ordering checks FAILED: {failed}")
 
 
 if __name__ == "__main__":

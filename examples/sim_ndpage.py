@@ -6,14 +6,40 @@ and prints the Fig-12/13/14 speedup table plus the Fig-4/5 characterization.
 Usage:
   PYTHONPATH=src python examples/sim_ndpage.py [--workloads rnd,bfs,dlrm]
       [--cores 1,4] [--trace-len 8000]
+  PYTHONPATH=src python examples/sim_ndpage.py --sweep pwc_size
+      # any preset from repro.configs.ndp_sim.SWEEPS — one batched
+      # dispatch per compiled-shape bucket, NDPage speedup per grid point
 """
 import argparse
 
 import numpy as np
 
-from repro.configs.ndp_sim import WORKLOADS, cpu_machine, ndp_machine
+from repro.configs.ndp_sim import SWEEPS, WORKLOADS, cpu_machine, ndp_machine
 from repro.sim import simulate
 from repro.workloads import generate_trace
+
+
+def run_sweep(name: str, trace_len: int | None) -> None:
+    """Run one named sensitivity sweep and print its speedup grid."""
+    from repro.sim import sweep
+    r = sweep(name, trace_len=trace_len)
+    s = r.stats
+    print(f"sweep {name!r}: {s['points']} points -> {s['buckets']} "
+          f"shape buckets, {s['runner_compiles']} runner compiles, "
+          f"{s['wall_s']:.1f}s")
+    axis, vals = next(iter(r.axes.items()))      # the swept axis
+    wls = r.axes.get("workload", ("?",))
+    print(f"{'ndpage speedup':>16s} " + " ".join(f"{w:>7s}" for w in wls))
+    for v in vals:
+        sub = r.select(**{axis: v})
+        if axis == "mechs":
+            mech = next(m for m in v if m.startswith("ndpage"))
+            row, label = sub.map(
+                lambda x: x.speedup_vs()[mech]), f"{mech}"
+        else:
+            row, label = sub.speedup("ndpage"), f"{axis}={v}"
+        print(f"{label:>16s} " + " ".join(f"{x:7.3f}"
+                                          for x in np.atleast_1d(row)))
 
 
 def main():
@@ -21,7 +47,13 @@ def main():
     ap.add_argument("--workloads", default="rnd,bfs,dlrm")
     ap.add_argument("--cores", default="1,4")
     ap.add_argument("--trace-len", type=int, default=6000)
+    ap.add_argument("--sweep", default=None, choices=sorted(SWEEPS),
+                    help="run a named sensitivity sweep instead of the "
+                         "figure tables")
     args = ap.parse_args()
+    if args.sweep:
+        run_sweep(args.sweep, args.trace_len)
+        return
     names = [w for w in args.workloads.split(",") if w in WORKLOADS]
     cores = [int(c) for c in args.cores.split(",")]
 

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Relative-link checker for the repo's markdown docs.
+
+Scans the given markdown files/directories for ``[text](target)``
+links and verifies every *relative* target resolves to an existing file
+or directory (external ``http(s)://``/``mailto:`` links and in-page
+``#anchors`` are skipped; a ``path#anchor`` target checks the path).
+No third-party dependencies — runs in the CI docs job.
+
+Usage:
+  python scripts/check_links.py README.md ROADMAP.md docs
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Iterable, List, Tuple
+
+#: inline markdown links; deliberately simple — our docs don't use
+#: reference-style links or parens-in-URLs
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def iter_md(paths: Iterable[str]) -> List[str]:
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, files in os.walk(p):
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".md"))
+        else:
+            out.append(p)
+    return out
+
+
+def broken_links(md_file: str) -> List[Tuple[str, str]]:
+    """(target, reason) for every broken relative link in one file."""
+    with open(md_file, encoding="utf-8") as f:
+        text = f.read()
+    bad = []
+    base = os.path.dirname(os.path.abspath(md_file))
+    for target in _LINK.findall(text):
+        if target.startswith(_SKIP) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            bad.append((target, f"missing: {resolved}"))
+    return bad
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or ["README.md"]
+    files = iter_md(paths)
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    n_bad = 0
+    for f in files:
+        for target, reason in broken_links(f):
+            print(f"{f}: broken link ({target}) — {reason}",
+                  file=sys.stderr)
+            n_bad += 1
+    print(f"checked {len(files)} markdown files: "
+          f"{n_bad} broken relative links")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -134,6 +134,69 @@ PRESETS: Dict[str, SimPreset] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# sensitivity-sweep presets (consumed by repro.sim.sweep.sweep(name))
+# ---------------------------------------------------------------------------
+#: the workload subset the sensitivity figures sweep over: one per
+#: suite-level behaviour (uniform, graph, frontier, MC lookup,
+#: embedding, k-mer) — 6 workloads x 4 machine variants = 24 points
+SWEEP_WORKLOADS: Tuple[str, ...] = ("rnd", "bc", "bfs", "xs", "dlrm",
+                                    "gen")
+
+#: Declarative grids for the paper's sensitivity studies.  Each entry is
+#: plain data: ``axes`` is an ordered (name, values) tuple — special
+#: names workload/machine/cores/mechs, everything else a MachineConfig
+#: override path — plus optional base/cores/workload/mechs/preset
+#: defaults and a human-facing ``figure`` note.  Shape-changing axes
+#: (PWC/TLB sizes) cost one compile per size; value-only axes
+#: (latencies, bypass flags) share ONE compiled runner across the whole
+#: grid — the bucketing is asserted in tests/test_sweep.py.
+SWEEPS: Dict[str, dict] = {
+    # PWC sizing: NDPage keeps its lead at every page-walk-cache size
+    "pwc_size": dict(
+        axes=(("pwc_entries", (8, 16, 32, 64)),
+              ("workload", SWEEP_WORKLOADS)),
+        base="ndp", cores=4,
+        figure="PWC-size sensitivity (4 shapes, 24 points)"),
+    # L1-DTLB sizing: translation overhead vs TLB reach
+    "tlb_size": dict(
+        axes=(("l1_dtlb.entries", (32, 64, 128, 256)),
+              ("workload", SWEEP_WORKLOADS)),
+        base="ndp", cores=4,
+        figure="L1-DTLB-size sensitivity (4 shapes, 24 points)"),
+    # L1-bypass ablation: ndpage vs ndpage_nobyp share walk functions,
+    # so BOTH mechanism tuples land in one shape bucket (bypass is
+    # per-lane data) — 24 points, at most one compile
+    "l1_bypass": dict(
+        axes=(("mechs", (("radix", "ndpage", "ideal"),
+                         ("radix", "ndpage_nobyp", "ideal"))),
+              ("workload", SWEEP_WORKLOADS)),
+        base="ndp", cores=4,
+        figure="L1-bypass on/off ablation (1 shape, 12 points)"),
+    # flattened-level choice: PL2-merge (ndpage) vs PL3-merge
+    # (ndpage_pl3) — different walk functions, two buckets
+    "flatten_level": dict(
+        axes=(("mechs", (("radix", "ndpage", "ideal"),
+                         ("radix", "ndpage_pl3", "ideal"))),
+              ("workload", SWEEP_WORKLOADS)),
+        base="ndp", cores=4,
+        figure="flattened-level choice PL2 vs PL3 (2 buckets)"),
+    # core scaling: the paper's 1/4/8-core study as one sweep
+    "core_scaling": dict(
+        axes=(("cores", CORE_COUNTS),
+              ("workload", SWEEP_WORKLOADS)),
+        base="ndp",
+        figure="1/4/8-core scaling (3 shapes, 18 points)"),
+    # memory latency: pure value axis — 24 points, ONE compiled runner
+    "mem_latency": dict(
+        axes=(("mem_latency", (60, 100, 170, 240)),
+              ("workload", SWEEP_WORKLOADS)),
+        base="ndp", cores=4,
+        figure="memory-latency sensitivity (1 shape, 24 points, "
+               "1 compile)"),
+}
+
+
 def __getattr__(name: str):
     # MECHANISMS is sourced from the one spec registry (repro.sim.mechanisms)
     # but resolved lazily: the simulator imports this module for

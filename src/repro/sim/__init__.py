@@ -9,5 +9,8 @@ simultaneously along a leading "mechanism" axis — the paper's five
 """
 from repro.sim.mechanisms import (DEFAULT_MECHS, MechanismSpec,  # noqa: F401
                                   register)
-from repro.sim.simulator import (SimResult, simulate,  # noqa: F401
-                                 simulate_batch)
+from repro.sim.simulator import (MachineShape, SimJob,  # noqa: F401
+                                 SimResult, machine_shape,
+                                 runner_cache_info, simulate,
+                                 simulate_batch, simulate_batch_varied)
+from repro.sim.sweep import SweepResult, sweep  # noqa: F401

@@ -187,6 +187,18 @@ register(MechanismSpec(
     description="flattened-PL3 NDPage variant: L4 + one merged L3/L2/L1 "
                 "access, PTEs bypass L1"))
 
+# Ablation for the paper's L1-bypass on/off sensitivity study: the same
+# flattened walk, but PTE fills go through (and pollute) the NDP L1.
+# Shares ndpage's walk function, so the sweep engine runs both in ONE
+# shape bucket — the bypass flag is per-lane data, not a new compile.
+register(MechanismSpec(
+    name="ndpage_nobyp", n_pte=3, bypass_l1=False,
+    pwc_levels=(True, True, False, False),
+    walk_fn=PT.ndpage_walk_lines,
+    description="NDPage with L1 bypass DISABLED (sensitivity ablation): "
+                "flattened walk kept, but PTE fills compete for the tiny "
+                "NDP L1 — degrades toward radix"))
+
 #: the paper's evaluation set, in figure order — the simulator default
 DEFAULT_MECHS: Tuple[str, ...] = ("radix", "ech", "hugepage", "ndpage",
                                   "ideal")

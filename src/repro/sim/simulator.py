@@ -37,10 +37,18 @@ A chunked ``jax.lax.scan``, split along the only real serial dependency:
 
 The trace is pre-generated, padded to fixed-shape chunks, and streamed
 through ONE jitted runner whose state buffers are donated between chunks.
-The runner is compiled once per (MachineConfig, mechanism tuple, chunk
-length) — trace length never retriggers compilation.  The queueing delay
-is held constant within a chunk (recomputed from aggregate demand at
-every chunk boundary), which is what makes the split exact.
+The runner is compiled once per (machine SHAPE, mechanism walk-fn tuple,
+chunk length) — trace length never retriggers compilation, and neither
+does any value-like machine parameter: :class:`MachineShape` captures
+only what determines array shapes (core count, table geometries), while
+latencies/service times (:func:`_data_params`) and the per-mechanism
+flag tables (:func:`_mech_arrays`) enter the jit as plain operands.
+That split is what makes parameter sweeps cheap — a grid over memory
+latency or the L1-bypass flag reuses one compiled runner, with the
+varying values riding the batch lanes as data (see
+:mod:`repro.sim.sweep`).  The queueing delay is held constant within a
+chunk (recomputed from aggregate demand at every chunk boundary), which
+is what makes the split exact.
 
 Batch axis
 ----------
@@ -63,6 +71,13 @@ When more than one XLA host device is available (opt-in via
 ``--xla_force_host_platform_device_count``), the B axis is sharded
 across devices with ``jax.sharding`` — lanes never communicate, so the
 fleet parallelizes embarrassingly.
+
+:func:`simulate_batch_varied` generalizes the lanes to heterogeneous
+jobs: every lane carries its own ``MachineConfig`` *values* and its own
+mechanism-table *values* (the shape half must match — that is the
+bucket invariant the sweep engine enforces), so one dispatch can cover
+a whole sensitivity grid over latencies, bypass flags, or huge-page
+knobs.
 """
 from __future__ import annotations
 
@@ -80,8 +95,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.ndp_sim import MachineConfig
 from repro.core import page_table as PT
 from repro.sim import mechanisms as _mechanisms
-from repro.sim.mechanisms import (DEFAULT_MECHS, MAX_PTE, MechTables,
-                                  specs_for, tables_for)
+from repro.sim.mechanisms import (DEFAULT_MECHS, MAX_PTE, specs_for,
+                                  tables_for)
 
 MECHS = DEFAULT_MECHS
 M = len(MECHS)
@@ -216,6 +231,82 @@ def _table_shapes(mach: MachineConfig) -> Dict[str, Tuple[int, int]]:
     return shapes
 
 
+# ---------------------------------------------------------------------------
+# the shape/data split: what compiles vs what rides along as operands
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MachineShape:
+    """Everything about a ``MachineConfig`` that determines ARRAY SHAPES
+    in the compiled runner: the core count plus the (sets, ways)
+    geometry of every LRU table.  Two configs with equal shape (and the
+    same mechanism walk functions) share one compiled runner — their
+    remaining differences (latencies, memory service time, huge-page
+    stalls, per-mechanism flags) are plain jit operands.  Hashable on
+    purpose: this IS the runner-cache key."""
+
+    num_cores: int
+    tables: Tuple[Tuple[str, int, int], ...]    # (name, sets, ways)
+
+    @property
+    def hier(self) -> Tuple[str, ...]:
+        names = {n for n, _, _ in self.tables}
+        return ("l1", "l2", "l3") if "l2" in names else ("l1",)
+
+
+def machine_shape(mach: MachineConfig) -> MachineShape:
+    return MachineShape(
+        num_cores=mach.num_cores,
+        tables=tuple((n, s, w)
+                     for n, (s, w) in _table_shapes(mach).items()))
+
+
+def _shape_tables(shape: MachineShape) -> Dict[str, Tuple[int, int]]:
+    return {n: (s, w) for n, s, w in shape.tables}
+
+
+def _data_params(mach: MachineConfig) -> Dict[str, np.float32]:
+    """The value-like half of a ``MachineConfig``: every latency the
+    timing epilogue consumes, as numpy scalars (NOT Python floats —
+    weak-typed constants would bake into the compiled graph and defeat
+    the shape/data split)."""
+    return {k: np.float32(v) for k, v in {
+        "mem_lat": mach.mem_latency,
+        "l1_lat": mach.l1d.latency,
+        "l2_lat": mach.l2.latency if mach.l2 else 0.0,
+        "l3_lat": mach.l3.latency if mach.l3 else 0.0,
+        "l2tlb_lat": mach.l2_tlb.latency,
+        "pwc_lat": mach.pwc_latency,
+        "service": mach.mem_service,
+        "promo": (HP_STALL_BASE
+                  + HP_STALL_PER_CORE * max(mach.num_cores - 1, 0)),
+        "ech_rehash": ECH_REHASH_QUAD * max(mach.num_cores - 2, 0) ** 2,
+    }.items()}
+
+
+def _mech_arrays(names: Tuple[str, ...]) -> Dict[str, np.ndarray]:
+    """The spec registry lowered to per-mechanism VALUE arrays — jit
+    operands as well, so lanes of one dispatch may disagree on walk
+    depth, bypass, PWC placement, or huge-page semantics.  Only the
+    walk-line FUNCTIONS (:func:`_walk_fns`) stay static."""
+    t = tables_for(names)
+    return {"n_pte": t.n_pte, "parallel": t.parallel, "bypass": t.bypass,
+            "pwc_on": t.pwc_on, "huge": t.huge, "ideal": t.ideal}
+
+
+def _walk_fns(names: Tuple[str, ...]) -> Tuple:
+    """The static (code, not data) half of a mechanism tuple: the
+    VPN -> PTE-line functions, part of the runner-cache key."""
+    return tuple(s.walk_fn for s in specs_for(names))
+
+
+def runner_cache_info():
+    """Cache stats of the compiled-runner cache: ``misses`` counts the
+    runners built this process — one per distinct (machine shape,
+    walk-fn tuple, chunk, batched) combination.  The sweep engine and
+    its tests use this to assert "one compile per shape bucket"."""
+    return _chunk_runner.cache_info()
+
+
 def init_state(mach: MachineConfig, m: int = M, batch: int | None = None):
     c = mach.num_cores
     # batch=None: one simulation, tables (C, M, sets, ways).  batch=B:
@@ -243,28 +334,15 @@ def init_state(mach: MachineConfig, m: int = M, batch: int | None = None):
 # ---------------------------------------------------------------------------
 # the model: sequential hit extraction + vectorized timing
 # ---------------------------------------------------------------------------
-def _build_model(mach: MachineConfig, tables: MechTables,
-                 batched: bool = False):
-    m = tables.num_mechs
-    is_cpu = mach.l2 is not None
-    hier = ("l1", "l2", "l3") if is_cpu else ("l1",)
-    shapes = _table_shapes(mach)
-    mem_lat = float(mach.mem_latency)
-    l1_lat = float(mach.l1d.latency)
-    l2tlb_lat = float(mach.l2_tlb.latency)
-    pwc_lat = float(mach.pwc_latency)
-    hier_lat = [float(mach.l1d.latency),
-                float(mach.l2.latency) if mach.l2 else 0.0,
-                float(mach.l3.latency) if mach.l3 else 0.0]
-    promo = HP_STALL_BASE + HP_STALL_PER_CORE * max(mach.num_cores - 1, 0)
-    ech_rehash = ECH_REHASH_QUAD * max(mach.num_cores - 2, 0) ** 2
-
-    n_pte = jnp.asarray(tables.n_pte)
-    parallel = jnp.asarray(tables.parallel)
-    bypass = jnp.asarray(tables.bypass)
-    pwc_on = jnp.asarray(tables.pwc_on)
-    huge_tab = jnp.asarray(tables.huge)
-    ideal_tab = jnp.asarray(tables.ideal)
+def _build_model(shape: MachineShape, batched: bool = False):
+    """The model, parameterized ONLY by shape: every latency and every
+    per-mechanism flag arrives at trace time as an operand (``dp`` data
+    params / ``mt`` mechanism tables), so one build serves a whole
+    sensitivity grid.  In the batched engine both may carry a leading
+    lane axis — lanes of one dispatch can simulate different machines
+    and mechanism variants."""
+    hier = shape.hier
+    shapes = _shape_tables(shape)
 
     # hit-bit layout of the packed per-entry int32
     #   0: l1tlb  1: l2tlb  2..5: pwc level  6+5*h..10+5*h: hierarchy
@@ -297,12 +375,14 @@ def _build_model(mach: MachineConfig, tables: MechTables,
                "lru": tab["lru"].at[s_safe, way].set(stamp, mode="drop")}
         return new, hit
 
-    def per_mc(sub, stamp, vpn, off, pte_lines, is4k, valid, mech):
+    def per_mc(sub, stamp, vpn, off, pte_lines, is4k, valid, mt):
         """Hit extraction for one (mech, core): touches every table once
-        per gated access site, returns the packed hit bits."""
-        ideal = ideal_tab[mech]
-        huge = huge_tab[mech]
-        byp = bypass[mech]
+        per gated access site, returns the packed hit bits.  ``mt`` is
+        this mechanism's scalar flag/depth values (vmapped off the M —
+        and, batched, the lane — axis of the mechanism tables)."""
+        ideal = mt["ideal"]
+        huge = mt["huge"]
+        byp = mt["bypass"]
 
         tlb_key = jnp.where(huge & ~is4k,
                             (vpn >> HUGE_SHIFT) | (1 << 26), vpn)
@@ -315,11 +395,11 @@ def _build_model(mach: MachineConfig, tables: MechTables,
         walk = en1 & ~h_l2tlb
 
         # hugepage 4KB-fallback regions walk like radix (4 levels)
-        eff_n = jnp.where(huge & is4k, MAX_PTE, n_pte[mech])
+        eff_n = jnp.where(huge & is4k, MAX_PTE, mt["n_pte"])
         bits = [h_l1tlb, h_l2tlb]
         pwc_hits = []
         for lvl in range(MAX_PTE):
-            en = walk & (lvl < eff_n) & pwc_on[mech, lvl]
+            en = walk & (lvl < eff_n) & mt["pwc_on"][lvl]
             sub["pwc"], h = access(sub["pwc"], shapes["pwc"],
                                    pte_lines[lvl], en, stamp + 2 + lvl,
                                    set_override=lvl)
@@ -351,49 +431,63 @@ def _build_model(mach: MachineConfig, tables: MechTables,
     # FUSED into the core axis: lanes are fully independent either way,
     # and a wider leading axis is the layout XLA-CPU already handles
     # well, whereas a literal third vmap level regresses the per-step
-    # gathers.  Only ``valid`` changes: per-sim trace lengths make it a
-    # per-lane input instead of a step-wide scalar.
+    # gathers.  ``valid`` and the mechanism tables change: per-sim trace
+    # lengths and per-sim mechanism values make them per-lane inputs.
     per_core = jax.vmap(per_mc,
                         in_axes=(0, 0, None, None, 0, None, None, 0))
     full = jax.vmap(per_core,
                     in_axes=(0, 0, 0, 0, 0, 0, None, None))
     full_v = jax.vmap(per_core,
-                      in_axes=(0, 0, 0, 0, 0, 0, 0, None))
-    mech_ids = jnp.arange(m)
+                      in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
 
-    def step(carry, x):
-        sub, stamp = carry
-        vpn, off, pte_lines, is4k, valid = x
-        fn = full_v if batched else full
-        sub, stamp, packed = fn(sub, stamp, vpn, off, pte_lines, is4k,
-                                valid, mech_ids)
-        return (sub, stamp), packed
+    def make_step(mt):
+        def step(carry, x):
+            sub, stamp = carry
+            vpn, off, pte_lines, is4k, valid = x
+            fn = full_v if batched else full
+            sub, stamp, packed = fn(sub, stamp, vpn, off, pte_lines,
+                                    is4k, valid, mt)
+            return (sub, stamp), packed
+        return step
 
-    def epilogue(packed, work, is4k, valid, q):
+    def epilogue(packed, work, is4k, valid, q, mt, dp):
         """Vectorized timing over the whole chunk.
 
         packed: (T, M, C) hit bits; work/is4k: (T, C); valid: (T,) — or
         (T, C) per-lane in the batched engine, where C is the fused
         B*cores axis; q: (M,) queue delay — (M, C) when batched (per-sim
         windows expanded per lane) — constant within the chunk.
+        ``mt`` mechanism tables ((M,) leaves, or (C, M) per lane) and
+        ``dp`` data params (scalars, or (C,) per lane) are operands.
         Re-derives the same gates the scan used (pure functions of the
         hit bits) and produces the (M, C) counter/clock deltas.
         """
         def bit(i):
             return ((packed >> i) & 1).astype(bool)
 
+        def mb(a):          # mech table -> broadcast over (T, M, C)
+            return a[None, :, None] if a.ndim == 1 else a.T[None]
+
+        def d3(v):          # data param -> broadcast over (T, M, C)
+            return v if v.ndim == 0 else v[None, None, :]
+
+        def d4(v):          # data param -> broadcast over (T, M, C, 5)
+            return v if v.ndim == 0 else v[None, None, :, None]
+
         validb = (valid[:, None, None] if valid.ndim == 1
                   else valid[:, None, :])                   # (T, 1, 1|C)
         is4kb = is4k[:, None, :]                            # (T, 1, C)
-        idealb = ideal_tab[None, :, None]
-        hugeb = huge_tab[None, :, None]
-        bypb = bypass[None, :, None]
+        idealb = mb(mt["ideal"])
+        hugeb = mb(mt["huge"])
+        bypb = mb(mt["bypass"])
         qb = q[None, :, None] if q.ndim == 1 else q[None]   # (1, M, 1|C)
+        mem4 = d4(dp["mem_lat"])
+        hier_lat = [dp["l1_lat"], dp["l2_lat"], dp["l3_lat"]][:len(hier)]
 
         h_l1tlb, h_l2tlb = bit(0), bit(1)
         en0 = validb & ~idealb
         walk = en0 & ~h_l1tlb & ~h_l2tlb                    # (T, M, C)
-        eff_n = jnp.where(hugeb & is4kb, MAX_PTE, n_pte[None, :, None])
+        eff_n = jnp.where(hugeb & is4kb, MAX_PTE, mb(mt["n_pte"]))
 
         # hierarchy latency per line (pte0..3, data): chain the per-level
         # hit bits top-down; a line that misses everywhere pays memory + q
@@ -402,10 +496,10 @@ def _build_model(mach: MachineConfig, tables: MechTables,
         went_mem = jnp.ones(packed.shape + (5,), bool)
         for h_i in range(len(hier)):
             h = jnp.stack([bit(6 + 5 * h_i + i) for i in range(5)], -1)
-            lat = lat + jnp.where(reached, hier_lat[h_i], 0.0)
+            lat = lat + jnp.where(reached, d4(hier_lat[h_i]), 0.0)
             went_mem = went_mem & ~h
             reached = reached & ~h
-        lat = lat + jnp.where(reached, mem_lat + qb[..., None], 0.0)
+        lat = lat + jnp.where(reached, mem4 + qb[..., None], 0.0)
 
         # per-PTE-level walk latency: PWC hit beats everything; NDPage
         # bypass goes straight to memory; cached mechanisms pay the chain
@@ -413,9 +507,9 @@ def _build_model(mach: MachineConfig, tables: MechTables,
         pte_en = (walk[..., None]
                   & (jnp.arange(MAX_PTE) < eff_n[..., None]))
         need_mem = pte_en & ~pwc_hit
-        pte_lat = jnp.where(bypb[..., None], mem_lat + qb[..., None],
+        pte_lat = jnp.where(bypb[..., None], mem4 + qb[..., None],
                             lat[..., :MAX_PTE])
-        pte_lat = jnp.where(pwc_hit, pwc_lat, pte_lat)
+        pte_lat = jnp.where(pwc_hit, d4(dp["pwc_lat"]), pte_lat)
         pte_lat = jnp.where(pte_en, pte_lat, 0.0)
 
         # parallel (ECH) walks: all probes issue simultaneously and the
@@ -423,13 +517,13 @@ def _build_model(mach: MachineConfig, tables: MechTables,
         # latency plus own-bank conflict + issue overhead.  The extra
         # probes only add traffic (counted in pte_mem -> queue pressure).
         # Multi-core: amortized cuckoo upsizing/rehash contention.
-        walk_cyc = jnp.where(parallel[None, :, None],
-                             pte_lat.max(-1) + 2.0 + ech_rehash,
+        walk_cyc = jnp.where(mb(mt["parallel"]),
+                             pte_lat.max(-1) + 2.0 + d3(dp["ech_rehash"]),
                              pte_lat.sum(-1))
 
         trans = jnp.where(walk, walk_cyc, 0.0)
-        trans = jnp.where(en0 & ~h_l1tlb, l2tlb_lat + trans, 0.0)
-        trans = trans + jnp.where(hugeb & validb, promo, 0.0)
+        trans = jnp.where(en0 & ~h_l1tlb, d3(dp["l2tlb_lat"]) + trans, 0.0)
+        trans = trans + jnp.where(hugeb & validb, d3(dp["promo"]), 0.0)
 
         pte_l1_hit = jnp.stack([bit(6 + i) for i in range(MAX_PTE)], -1)
         pte_mem = jnp.where(need_mem,
@@ -439,7 +533,9 @@ def _build_model(mach: MachineConfig, tables: MechTables,
         dlat = jnp.where(validb, lat[..., MAX_PTE], 0.0)
 
         step_cyc = jnp.where(
-            validb, work[:, None, :] + 1.0 + trans + (dlat - l1_lat), 0.0)
+            validb,
+            work[:, None, :] + 1.0 + trans + (dlat - d3(dp["l1_lat"])),
+            0.0)
 
         # NB: XLA-CPU's axis-0 reduce keeps one association for every
         # lane width except 1 (rank-collapse special case), so these f32
@@ -463,67 +559,72 @@ def _build_model(mach: MachineConfig, tables: MechTables,
                  + data_mem.astype(jnp.float32).sum(axis=0))
         return cnt, step_cyc.sum(axis=0), mem_n
 
-    return step, epilogue
+    return make_step, epilogue
 
 
 # ---------------------------------------------------------------------------
 # chunked driver
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _chunk_runner(mach: MachineConfig, names: Tuple[str, ...], chunk: int,
+def _chunk_runner(shape: MachineShape, walk_fns: Tuple, chunk: int,
                   batch: bool = False):
     """One jitted (scan + epilogue) over a chunk, specialized per
-    (machine, mechanism tuple, chunk length) and cached for the life of
-    the process.  State buffers are donated: chunk i+1 reuses chunk i's
-    memory.  The per-mechanism PTE walk lines are derived from the VPNs
-    inside the jit so the host never materializes (T, C, M, MAX_PTE).
+    (machine SHAPE, walk-fn tuple, chunk length) and cached for the life
+    of the process.  Machine latencies (``dp``) and per-mechanism flag
+    tables (``mt``) are operands, so every value-only machine or
+    mechanism variant reuses the same compiled runner.  State buffers
+    are donated: chunk i+1 reuses chunk i's memory.  The per-mechanism
+    PTE walk lines are derived from the VPNs inside the jit so the host
+    never materializes (T, C, M, MAX_PTE).
 
     ``batch=True`` builds the B-axis variant: xs arrive as (T, B, C)
-    (valid: (T, B)), state carries a leading B, and the queue window is
-    tracked per sim.  One jitted callable serves every B (jit re-traces
-    per shape) and every sharding of the B axis."""
-    specs = specs_for(names)
-    step, epilogue = _build_model(mach, tables_for(names), batched=batch)
-    service = float(mach.mem_service)
-    table_names = tuple(_table_shapes(mach))
+    (valid: (T, B)), state carries a leading B, mt/dp carry a leading B
+    (heterogeneous lanes), and the queue window is tracked per sim.
+    One jitted callable serves every B (jit re-traces per shape) and
+    every sharding of the B axis."""
+    make_step, epilogue = _build_model(shape, batched=batch)
+    table_names = tuple(n for n, _, _ in shape.tables)
 
-    def walk_lines(vpn, is4k):
-        """(..., C) vpns -> (..., C, M, MAX_PTE) PTE line ids."""
+    def walk_lines(vpn, is4k, huge):
+        """(..., C) vpns -> (..., C, M, MAX_PTE) PTE line ids.  ``huge``
+        is runtime data ((M,) or (lanes, M)): huge-page mechanisms blend
+        in the radix fallback lines for fragmented (4KB) regions."""
         radix = _pad_lines(PT.radix4_walk_lines(vpn))
         per_mech = []
-        for s in specs:
-            if s.walk_fn is None:
+        for i, fn in enumerate(walk_fns):
+            if fn is None:
                 lines = jnp.zeros_like(radix)
-            elif s.walk_fn is PT.radix4_walk_lines:
+            elif fn is PT.radix4_walk_lines:
                 lines = radix
             else:
-                lines = _pad_lines(s.walk_fn(vpn))
-            if s.huge:   # 4KB-fallback regions walk like radix (4 levels)
-                lines = jnp.where(is4k[..., None], radix, lines)
+                lines = _pad_lines(fn(vpn))
+            h = huge[i] if huge.ndim == 1 else huge[None, :, i, None]
+            lines = jnp.where(h & is4k[..., None], radix, lines)
             per_mech.append(lines)
         return jnp.stack(per_mech, axis=-2)
 
-    def _queue(clock, mem_accs):
+    def _queue(clock, mem_accs, service):
         # queue delay from aggregate demand measured so far (per mech,
         # per sim).  Bounded-linear law: banked DRAM degrades gently up
         # to saturation (an M/M/1 knee over-penalizes small traffic
         # deltas at high load).  Held constant within the chunk.
         elapsed = jnp.maximum(clock.mean(axis=-1), 1.0)
         rate = mem_accs / elapsed                 # aggregate accesses/cycle
-        rho = jnp.clip(rate * service, 0.0, 0.96)
-        return service * rho * QUEUE_K            # (M,) / batched (B, M)
+        svc = service if service.ndim == 0 else service[:, None]
+        rho = jnp.clip(rate * svc, 0.0, 0.96)
+        return svc * rho * QUEUE_K                # (M,) / batched (B, M)
 
-    def run(state, xs):
+    def run(state, xs, mt, dp):
         vpn, off, work, is4k, valid = xs
-        pte = walk_lines(vpn, is4k)
-        q = _queue(state["clock"], state["mem_accs"])          # (M,)
+        pte = walk_lines(vpn, is4k, mt["huge"])
+        q = _queue(state["clock"], state["mem_accs"], dp["service"])
         carry = ({k: state[k] for k in table_names}, state["stamp"])
         (tabs, stamp), packed = jax.lax.scan(
-            step, carry, (vpn, off, pte, is4k, valid))
+            make_step(mt), carry, (vpn, off, pte, is4k, valid))
         # scan emits (T, C, M); the cheap summary arrays go back to the
         # public (T, M, C) orientation here
         cnt, cyc, mem_n = epilogue(jnp.swapaxes(packed, 1, 2),
-                                   work, is4k, valid, q)
+                                   work, is4k, valid, q, mt, dp)
 
         new_state = dict(tabs)
         new_state["stamp"] = stamp
@@ -533,30 +634,33 @@ def _chunk_runner(mach: MachineConfig, names: Tuple[str, ...], chunk: int,
             k: state["counters"][k] + cnt[k] for k in state["counters"]}
         return new_state
 
-    m = len(specs)
-
-    def run_batch(state, xs):
+    def run_batch(state, xs, mt, dp):
         """B sims as one dispatch.  State arrives (B, C, M, ...) and is
         reshaped — free, the leading axes are contiguous — onto the
         fused (B*C, M, ...) lane layout the proven two-level engine
-        runs; only valid bits and queue windows are expanded per lane.
-        Public counters stay per-sim (B, M, C)."""
+        runs; valid bits, queue windows, mechanism tables, and data
+        params are expanded per lane.  Public counters stay per-sim
+        (B, M, C)."""
         vpn, off, work, is4k, valid = xs          # (T, B, C); valid (T, B)
         t, b, c = vpn.shape
+        m = state["stamp"].shape[-1]
         fuse = lambda a: a.reshape((t, b * c) + a.shape[3:])   # noqa: E731
         vpn, off, work, is4k = (fuse(a) for a in (vpn, off, work, is4k))
         valid = jnp.repeat(valid, c, axis=1)      # (T, B*C)
-        pte = walk_lines(vpn, is4k)
-        q = _queue(state["clock"], state["mem_accs"])          # (B, M)
+        mt_l = {k: jnp.repeat(v, c, axis=0) for k, v in mt.items()}
+        dp_l = {k: jnp.repeat(v, c, axis=0) for k, v in dp.items()}
+        pte = walk_lines(vpn, is4k, mt_l["huge"])
+        q = _queue(state["clock"], state["mem_accs"],
+                   dp["service"])                 # (B, M)
         q_lane = jnp.repeat(q.T, c, axis=1)       # (M, B*C)
 
         carry = (jax.tree.map(lambda a: a.reshape((b * c,) + a.shape[2:]),
                               {k: state[k] for k in table_names}),
                  state["stamp"].reshape(b * c, m))
         (tabs, stamp), packed = jax.lax.scan(
-            step, carry, (vpn, off, pte, is4k, valid))
+            make_step(mt_l), carry, (vpn, off, pte, is4k, valid))
         cnt, cyc, mem_n = epilogue(jnp.swapaxes(packed, 1, 2),
-                                   work, is4k, valid, q_lane)
+                                   work, is4k, valid, q_lane, mt_l, dp_l)
 
         def unfuse_mc(a):                          # (M, B*C) -> (B, M, C)
             return jnp.moveaxis(a.reshape(a.shape[0], b, c), 1, 0)
@@ -634,10 +738,13 @@ def _simulate_single(mach: MachineConfig, trace: Dict[str, np.ndarray],
           valid)
     xs = tuple(jnp.asarray(a) for a in xs)
 
-    runner = _chunk_runner(mach, names, chunk)
+    runner = _chunk_runner(machine_shape(mach), _walk_fns(names), chunk)
+    mt = {k: jnp.asarray(v) for k, v in _mech_arrays(names).items()}
+    dp = {k: jnp.asarray(v) for k, v in _data_params(mach).items()}
     state = init_state(mach, m)
     for i in range(0, t + pad, chunk):
-        state = runner(state, jax.tree.map(lambda a: a[i:i + chunk], xs))
+        state = runner(state, jax.tree.map(lambda a: a[i:i + chunk], xs),
+                       mt, dp)
     state = jax.block_until_ready(state)
 
     cnt = {k: np.asarray(v) for k, v in state["counters"].items()}
@@ -665,15 +772,16 @@ def simulate_batch(mach: MachineConfig,
                    chunk: int = DEFAULT_CHUNK,
                    devices: int | None = None,
                    timings: Dict | None = None) -> List[SimResult]:
-    """Run B independent simulations sharing ``mach``'s shape as ONE
-    batched chunked-scan dispatch.
+    """Run B independent simulations sharing ``mach`` as ONE batched
+    chunked-scan dispatch.
 
     ``traces`` is a sequence of trace dicts (each ``(num_cores, T_i)``);
     lanes with shorter traces are masked with per-sim valid bits, so
     mixed-length buckets are fine.  Results are bit-exact vs calling
     :func:`simulate` per trace — state is laid out ``(B, C, M, sets,
     ways)`` and fused to a wider lane axis at dispatch; lanes never
-    interact.
+    interact.  Thin wrapper over :func:`simulate_batch_varied` with
+    every lane on the same machine and mechanism tuple.
 
     ``devices`` shards the B axis over that many XLA devices (default:
     all of them when ``SIM_DEVICES`` forced multiple host devices,
@@ -684,20 +792,65 @@ def simulate_batch(mach: MachineConfig,
     "chunks".
     """
     names = DEFAULT_MECHS if mechs is None else tuple(mechs)
-    m = len(specs_for(names))
-    c = mach.num_cores
+    return simulate_batch_varied(
+        [SimJob(mach, tr, names) for tr in traces], length,
+        chunk=chunk, devices=devices, timings=timings)
 
-    vpns, offs, works, lens = [], [], [], []
-    for tr in traces:
-        vpn = tr["vpn"][:, :length] if length else tr["vpn"]
-        assert vpn.shape[0] == c, (vpn.shape[0], c)
-        vpns.append(vpn)
-        offs.append(tr["off"][:, : vpn.shape[1]])
-        works.append(tr["work"][:, : vpn.shape[1]])
-        lens.append(vpn.shape[1])
-    b = len(traces)
+
+@dataclasses.dataclass
+class SimJob:
+    """One lane of a varied batch: a machine, its trace, and the
+    mechanism tuple to evaluate.  All jobs of one
+    :func:`simulate_batch_varied` call must share the machine SHAPE
+    (:func:`machine_shape`) and the mechanisms' walk-fn tuple —
+    everything value-like (latencies, service time, bypass/PWC/huge
+    flags, walk depth) may differ per lane."""
+
+    mach: MachineConfig
+    trace: Dict[str, np.ndarray]
+    mechs: Tuple[str, ...] = DEFAULT_MECHS
+
+
+def simulate_batch_varied(jobs: Sequence[SimJob],
+                          length: int | None = None, *,
+                          chunk: int = DEFAULT_CHUNK,
+                          devices: int | None = None,
+                          timings: Dict | None = None) -> List[SimResult]:
+    """B heterogeneous (machine, trace, mechanisms) jobs as ONE batched
+    chunked-scan dispatch — the sweep engine's bucket primitive.
+
+    The jobs must form one *shape bucket*: equal :func:`machine_shape`
+    and equal mechanism walk-fn tuples (a ``ValueError`` names the
+    offender otherwise).  Everything value-like varies per lane via the
+    mt/dp operand stacks, so e.g. a memory-latency grid or an L1-bypass
+    ablation is a single dispatch with zero extra compiles.
+    """
+    b = len(jobs)
     if b == 0:
         return []
+    shape = machine_shape(jobs[0].mach)
+    wf = _walk_fns(jobs[0].mechs)
+    m = len(specs_for(jobs[0].mechs))
+    c = shape.num_cores
+    for j in jobs:
+        if machine_shape(j.mach) != shape:
+            raise ValueError(
+                f"job {j.mach.name!r} breaks the shape bucket: "
+                f"{machine_shape(j.mach)} != {shape} — split the batch "
+                "by machine_shape() first")
+        if _walk_fns(j.mechs) != wf:
+            raise ValueError(
+                f"job mechs {j.mechs} have different walk functions "
+                "than the bucket's — bucket by walk-fn tuple first")
+
+    vpns, offs, works, lens = [], [], [], []
+    for j in jobs:
+        vpn = j.trace["vpn"][:, :length] if length else j.trace["vpn"]
+        assert vpn.shape[0] == c, (vpn.shape[0], c)
+        vpns.append(vpn)
+        offs.append(j.trace["off"][:, : vpn.shape[1]])
+        works.append(j.trace["work"][:, : vpn.shape[1]])
+        lens.append(vpn.shape[1])
     t_pad = max(lens) + (-max(lens)) % chunk
 
     ndev = devices
@@ -716,10 +869,11 @@ def simulate_batch(mach: MachineConfig,
         return out
 
     # huge-page fragmentation: which 2MB regions fell back to 4KB
-    frac = FRAC_4K.get(mach.num_cores, min(0.93, 0.05 + 0.11 *
-                                           mach.num_cores))
-    is4ks = [(_hash_np(v >> HUGE_SHIFT) % 1000) < int(frac * 1000)
-             for v in vpns]
+    is4ks = []
+    for j, v in zip(jobs, vpns):
+        frac = FRAC_4K.get(j.mach.num_cores, min(0.93, 0.05 + 0.11 *
+                                                 j.mach.num_cores))
+        is4ks.append((_hash_np(v >> HUGE_SHIFT) % 1000) < int(frac * 1000))
     valid = np.zeros((t_pad, bp), bool)
     for i, n in enumerate(lens):
         valid[:n, i] = True
@@ -727,20 +881,31 @@ def simulate_batch(mach: MachineConfig,
           pack(works, np.float32), pack(is4ks, bool), valid)
     xs = tuple(jnp.asarray(a) for a in xs)
 
-    state = init_state(mach, m, batch=bp)
+    # per-lane value stacks; pad lanes reuse job 0 (their valid bits are
+    # all False, so their counters are discarded anyway)
+    pad_jobs = list(jobs) + [jobs[0]] * (bp - b)
+    mts = [_mech_arrays(j.mechs) for j in pad_jobs]
+    dps = [_data_params(j.mach) for j in pad_jobs]
+    mt = {k: jnp.asarray(np.stack([t[k] for t in mts])) for k in mts[0]}
+    dp = {k: jnp.asarray(np.stack([d[k] for d in dps])) for k in dps[0]}
+
+    state = init_state(jobs[0].mach, m, batch=bp)
     if ndev > 1:
         mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("b",))
         st_sh = NamedSharding(mesh, P("b"))    # state: B leading everywhere
         xs_sh = NamedSharding(mesh, P(None, "b"))   # xs: (T, B, ...)
         state = jax.tree.map(lambda a: jax.device_put(a, st_sh), state)
         xs = tuple(jax.device_put(a, xs_sh) for a in xs)
+        mt = {k: jax.device_put(v, st_sh) for k, v in mt.items()}
+        dp = {k: jax.device_put(v, st_sh) for k, v in dp.items()}
 
-    runner = _chunk_runner(mach, names, chunk, batch=True)
+    runner = _chunk_runner(shape, wf, chunk, batch=True)
     n_chunks = t_pad // chunk
     t0 = time.perf_counter()
     t_first = 0.0
     for k, i in enumerate(range(0, t_pad, chunk)):
-        state = runner(state, jax.tree.map(lambda a: a[i:i + chunk], xs))
+        state = runner(state, jax.tree.map(lambda a: a[i:i + chunk], xs),
+                       mt, dp)
         if timings is not None and k == 0:
             # one extra sync: the first chunk carries trace+compile cost,
             # later chunks stay pipelined (async dispatch)
@@ -759,7 +924,7 @@ def simulate_batch(mach: MachineConfig,
     cnt = {k: np.asarray(v) for k, v in state["counters"].items()}
     clock = np.asarray(state["clock"])
     return [SimResult(
-        mechs=names,
+        mechs=jobs[i].mechs,
         cycles=clock[i],
         instructions=np.asarray((works[i] + 1).sum(axis=1), np.float64),
         trans_cycles=cnt["trans"][i],

@@ -1,0 +1,48 @@
+"""Docs cannot drift from code: the generated mechanism table matches a
+fresh render of the registry, and every relative markdown link in
+README/ROADMAP/docs resolves."""
+import importlib.util
+import os
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _load(script):
+    path = os.path.join(ROOT, "scripts", script)
+    spec = importlib.util.spec_from_file_location(script[:-3], path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestMechDocs:
+    def test_regenerating_produces_no_diff(self):
+        gen = _load("gen_mech_docs.py")
+        with open(gen.DOC_PATH) as f:
+            committed = f.read()
+        assert committed == gen.render(), (
+            "docs/mechanisms.md is stale — regenerate with "
+            "`PYTHONPATH=src python scripts/gen_mech_docs.py`")
+
+    def test_check_mode_passes(self):
+        gen = _load("gen_mech_docs.py")
+        assert gen.main(["--check"]) == 0
+
+    def test_every_registered_mechanism_documented(self):
+        from repro.sim import mechanisms as MS
+        gen = _load("gen_mech_docs.py")
+        text = gen.render()
+        for name in MS.registered_names():
+            assert f"| `{name}` " in text, name
+
+
+class TestLinks:
+    def test_no_broken_relative_links(self):
+        chk = _load("check_links.py")
+        files = chk.iter_md([os.path.join(ROOT, "README.md"),
+                             os.path.join(ROOT, "ROADMAP.md"),
+                             os.path.join(ROOT, "docs")])
+        assert len(files) >= 4            # README + ROADMAP + 3 docs
+        bad = {f: chk.broken_links(f) for f in files}
+        bad = {f: b for f, b in bad.items() if b}
+        assert not bad, f"broken markdown links: {bad}"

@@ -1,0 +1,193 @@
+"""sweep(): grid -> shape buckets -> one dispatch per bucket.
+
+Covers the ISSUE-3 edge cases: a 1-point grid is bit-exact vs plain
+simulate, shape-bucketing never splits parameter values that share a
+shape, SweepResult.select round-trips every named axis, and the
+acceptance criterion — a >= 24-point preset compiles at most one runner
+per distinct array shape (via the runner cache) with the paper's
+sensitivity orderings intact.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.ndp_sim import SWEEPS, ndp_machine
+from repro.sim import simulate, sweep
+from repro.sim.sweep import apply_param
+from repro.workloads import generate_trace
+
+#: chunk lengths unique to this file so runner-cache accounting below is
+#: exact (the cache is keyed on (shape, walk fns, chunk, batched) and
+#: shared process-wide; a chunk no other test uses -> fresh keys)
+CHUNK_A = 320
+CHUNK_B = 352
+LEN = 700
+
+
+def _assert_results_equal(a, b, msg=""):
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb,
+                                          err_msg=f"{msg}: {f.name}")
+        else:
+            assert va == vb, f"{msg}: {f.name}"
+
+
+class TestGridEdgeCases:
+    def test_one_point_grid_bit_exact_vs_simulate(self):
+        """A degenerate 1-point sweep must reproduce plain simulate()
+        counter-for-counter — same trace, same chunking, same engine."""
+        r = sweep({"workload": ("rnd",)}, cores=2, trace_len=LEN,
+                  seed=1234, chunk=512)
+        assert r.stats["points"] == 1 and r.stats["buckets"] == 1
+        want = simulate(ndp_machine(2),
+                        generate_trace("rnd", 2, length=LEN, seed=1234,
+                                       preset="smoke"),
+                        chunk=512)
+        _assert_results_equal(r.point(workload="rnd"), want, "1-point")
+
+    def test_bucketing_never_splits_shared_shapes(self):
+        """Value-only axes (mem_latency) must never split a shape
+        bucket; shape axes (pwc_entries) split exactly per value."""
+        r = sweep({"mem_latency": (100, 140, 170),
+                   "pwc_entries": (16, 32),
+                   "workload": ("rnd",)},
+                  cores=2, trace_len=LEN, chunk=CHUNK_A)
+        assert r.stats["points"] == 6
+        assert r.stats["buckets"] == 2          # one per pwc_entries value
+        # every bucket holds ALL latency variants of its shape
+        for b in r.stats["per_bucket"]:
+            assert b["lanes"] == 3
+            assert b["compiles"] <= 1
+        assert r.stats["runner_compiles"] == 2  # fresh chunk -> exact
+
+    def test_value_only_grid_is_one_bucket_one_compile(self):
+        r = sweep({"mem_latency": (100, 170), "mem_service": (14.0, 40.0),
+                   "workload": ("rnd", "bc")},
+                  cores=2, trace_len=LEN, chunk=CHUNK_B)
+        assert r.stats["points"] == 8
+        assert r.stats["buckets"] == 1
+        assert r.stats["runner_compiles"] == 1  # fresh chunk -> exact
+        # higher memory latency must not speed anything up
+        cyc = r.map(lambda x: float(x.cycles.mean()))
+        assert (cyc[1] >= cyc[0]).all()
+
+    def test_unknown_param_and_workload_raise(self):
+        with pytest.raises(KeyError, match="no field"):
+            sweep({"l1_dtlb.entriez": (32,)}, cores=2, trace_len=LEN)
+        with pytest.raises(KeyError, match="unknown workload"):
+            sweep({"workload": ("nope",)}, cores=2, trace_len=LEN)
+        with pytest.raises(KeyError, match="unknown sweep preset"):
+            sweep("not_a_preset")
+
+    def test_apply_param_nested(self):
+        m = apply_param(ndp_machine(2), "l1_dtlb.entries", 128)
+        assert m.l1_dtlb.entries == 128
+        assert m.l1_dtlb.ways == ndp_machine(2).l1_dtlb.ways
+        assert ndp_machine(2).l1_dtlb.entries == 64   # original untouched
+
+
+class TestSelect:
+    @pytest.fixture(scope="class")
+    def res(self):
+        return sweep({"mem_latency": (100, 170),
+                      "workload": ("rnd", "bc", "bfs")},
+                     cores=2, trace_len=LEN, chunk=512)
+
+    def test_select_round_trips_every_axis(self, res):
+        """For every named axis: re-stacking per-value selections
+        reproduces the full grid, and selecting the full value list is
+        the identity."""
+        full = res.scalar("avg_ptw_latency", "radix")
+        for dim, (name, vals) in enumerate(res.axes.items()):
+            parts = [res.select(**{name: v})
+                     for v in vals]                      # scalar: drops axis
+            for p in parts:
+                assert name not in p.axes
+            restacked = np.stack(
+                [p.scalar("avg_ptw_latency", "radix") for p in parts],
+                axis=dim)
+            np.testing.assert_array_equal(restacked, full)
+            ident = res.select(**{name: list(vals)})     # list: keeps axis
+            assert ident.axes == res.axes
+            np.testing.assert_array_equal(
+                ident.scalar("avg_ptw_latency", "radix"), full)
+
+    def test_select_subsets_and_reorders(self, res):
+        sub = res.select(workload=["bfs", "rnd"])
+        assert sub.axes["workload"] == ("bfs", "rnd")
+        np.testing.assert_array_equal(
+            sub.speedup("ndpage")[:, 1],
+            res.select(workload="rnd").speedup("ndpage"))
+
+    def test_point_and_errors(self, res):
+        p = res.point(mem_latency=100, workload="bc")
+        assert p.mechs[0] == "radix"
+        with pytest.raises(KeyError, match="every axis pinned"):
+            res.point(mem_latency=100)
+        with pytest.raises(KeyError, match="unknown sweep axes"):
+            res.select(nope=1)
+        with pytest.raises(KeyError, match="no value"):
+            res.select(mem_latency=999)
+
+    def test_chained_select_matches_direct_point(self, res):
+        a = res.select(mem_latency=170).select(workload="bfs").results[()]
+        b = res.point(mem_latency=170, workload="bfs")
+        _assert_results_equal(a, b, "chained select")
+
+
+class TestAcceptance:
+    """ISSUE-3 acceptance: >= 24 (machine-variant x workload) points,
+    at most one runner compile per distinct array shape, sensitivity
+    orderings preserved."""
+
+    def test_mem_latency_preset_24_points_one_compile(self):
+        spec = dict(SWEEPS["mem_latency"])
+        n_pts = np.prod([len(v) for _, v in spec["axes"]])
+        assert n_pts >= 24
+        r = sweep("mem_latency", chunk=CHUNK_A)
+        assert r.stats["points"] == n_pts
+        # pure value grid: every machine variant shares ONE shape, so
+        # the whole 24-point sweep is one bucket...
+        assert r.stats["buckets"] == 1
+        # ...and at most one runner exists per distinct shape (the
+        # ndp-4c shape at CHUNK_A was already built by the bucketing
+        # test above if it ran first, hence <=)
+        assert r.stats["runner_compiles"] <= 1
+        assert all(b["compiles"] <= 1 for b in r.stats["per_bucket"])
+        # NDPage >= radix at every latency x workload
+        assert (r.speedup("ndpage") >= 1.0).all()
+
+    def test_pwc_size_preset_one_compile_per_shape(self):
+        r = sweep("pwc_size", chunk=CHUNK_B)
+        assert r.stats["points"] >= 24
+        n_sizes = len(r.axes["pwc_entries"])
+        assert r.stats["buckets"] == n_sizes
+        assert r.stats["runner_compiles"] <= n_sizes
+        assert all(b["compiles"] <= 1 for b in r.stats["per_bucket"])
+        # the paper's ordering: NDPage >= radix at EVERY PWC size
+        assert (r.speedup("ndpage") >= 1.0).all()
+
+    def test_bypass_off_degrades_toward_radix(self):
+        r = sweep("l1_bypass", chunk=CHUNK_A)
+        # ndpage and ndpage_nobyp share walk functions: ONE shape bucket
+        assert r.stats["buckets"] == 1
+        assert all(b["compiles"] <= 1 for b in r.stats["per_bucket"])
+        (mechs_on, mechs_off) = r.axes["mechs"]
+        on = r.select(mechs=mechs_on).map(
+            lambda x: x.speedup_vs()["ndpage"])
+        off = r.select(mechs=mechs_off).map(
+            lambda x: x.speedup_vs()["ndpage_nobyp"])
+        # the paper's claim shape: averaged over the suite, disabling
+        # the bypass degrades NDPage toward radix (it keeps the
+        # flattened walk, so it stays above radix).  Per-workload the
+        # uniform-probe traces degrade monotonically; the graph traces
+        # can gain a little PTE-line reuse from the flattened node's
+        # contiguity, which is why the suite mean is the right assert.
+        assert off.mean() < on.mean()
+        assert (off >= 1.0).all()
+        wl = list(r.axes["workload"])
+        uni = [wl.index(w) for w in ("rnd", "xs", "dlrm", "gen")]
+        assert (off[uni] < on[uni]).all()
