@@ -4,15 +4,24 @@ Prints ``name,us_per_call,derived`` CSV and writes bench_results.json plus
 BENCH_sim.json (per-mechanism cycles + engine wall-clock — the perf
 trajectory future PRs compare against).
 
-Sections:
+Sections (stages):
   * Figs 4-8:   address-translation characterization (NDP vs CPU)
   * Figs 12-14: end-to-end speedups of ECH / HugePage / NDPage / Ideal
   * kernels:    serving-layer microbenches (translation, paged attention,
                 blockwise attention, engine throughput, simulator speed)
+  * --sweeps:   sensitivity sweeps (benchmarks/sim_sweep.py);
+                ``--sweep-presets a,b`` selects a subset
+  * --trace-validate: real-vs-synthetic trace comparison
+                (benchmarks/trace_validate.py)
 
 ``--fast`` (or SIM_FIGS_FAST=1) runs the simulator figures on the smoke
 preset — same engine and orderings, CI wall-clock.  ``--sim-only`` skips
 the kernel microbenches.
+
+Every requested stage runs even if an earlier one fails, but ANY stage
+failure (an exception, or a failed ordering/validation check) makes the
+driver exit non-zero with a per-stage summary — a broken stage can
+never hide in the middle of a green nightly log.
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ import json
 import os
 import sys
 import time
+import traceback
 
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 for _p in (_ROOT, os.path.join(_ROOT, "src")):
@@ -54,6 +64,12 @@ def _setup_jax_cache() -> None:
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
 
 
+def _print_rows(rows) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--fast", action="store_true",
@@ -63,65 +79,109 @@ def main(argv=None) -> None:
     p.add_argument("--sweeps", action="store_true",
                    help="also run the sensitivity sweeps "
                         "(benchmarks/sim_sweep.py)")
+    p.add_argument("--sweep-presets", default=None,
+                   help="comma-separated sweep preset subset (default: "
+                        "all) — nightly CI runs a reduced grid")
+    p.add_argument("--trace-validate", action="store_true",
+                   help="also run the real-vs-synthetic trace "
+                        "validation (benchmarks/trace_validate.py)")
     args = p.parse_args(argv)
     if args.fast:
         os.environ["SIM_FIGS_FAST"] = "1"
+    fast = args.fast or bool(int(os.environ.get("SIM_FIGS_FAST", "0")))
 
     _setup_host_devices()
     _setup_jax_cache()
-    t0 = time.time()
-    from benchmarks import sim_figures
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    bench_sim_path = os.path.join(root, "BENCH_sim.json")
 
-    rows = []
+    # each stage runs isolated: a raising stage is RECORDED (and the
+    # driver exits non-zero at the end) but never silently aborts the
+    # stages after it — nightly logs show every failure, masked by none
+    failures: list = []
+
+    def stage(name, fn):
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"# STAGE FAILED: {name}", file=sys.stderr)
+
+    rows: list = []
+    summary: dict = {}
     print("name,us_per_call,derived")
     sys.stdout.flush()
 
-    fig_rows, summary = sim_figures.run_all()
-    sim_wall = time.time() - t0
-    for name, us, derived in fig_rows:
-        print(f"{name},{us:.1f},{derived}")
-        sys.stdout.flush()
-    rows.extend(fig_rows)
+    def write_bench_results():
+        # rewritten after every row-producing stage so a later stage
+        # failing never costs the rows already measured
+        out = {
+            "rows": [{"name": n, "us_per_call": u, "derived": d}
+                     for n, u, d in rows],
+            "speedup_summary": summary,
+        }
+        with open(os.path.join(root, "bench_results.json"), "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {os.path.join(root, 'bench_results.json')}")
 
-    if not args.sim_only:
+    def st_figures():
+        t0 = time.time()
+        from benchmarks import sim_figures
+        fig_rows, fig_summary = sim_figures.run_all()
+        sim_wall = time.time() - t0
+        _print_rows(fig_rows)
+        rows.extend(fig_rows)
+        summary.update(fig_summary)
+        write_bench_results()
+
+        bench_sim = dict(fig_summary.get("perf", {}))
+        bench_sim["figures_wall_s"] = round(sim_wall, 2)
+        bench_sim["speedups"] = {k: v for k, v in fig_summary.items()
+                                 if k != "perf"}
+        with open(bench_sim_path, "w") as f:
+            json.dump(bench_sim, f, indent=1)
+        print(f"# wrote {bench_sim_path} "
+              f"(figures wall {sim_wall:.1f}s)")
+
+    def st_kernels():
         from benchmarks import kernel_bench
-        for name, us, derived in kernel_bench.run_all():
-            print(f"{name},{us:.1f},{derived}")
-            sys.stdout.flush()
-            rows.append((name, us, derived))
+        krows = kernel_bench.run_all()
+        _print_rows(krows)
+        rows.extend(krows)
+        write_bench_results()
 
-    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-    out = {
-        "rows": [{"name": n, "us_per_call": u, "derived": d}
-                 for n, u, d in rows],
-        "speedup_summary": summary,
-    }
-    with open(os.path.join(root, "bench_results.json"), "w") as f:
-        json.dump(out, f, indent=1)
-
-    bench_sim = dict(summary.get("perf", {}))
-    bench_sim["figures_wall_s"] = round(sim_wall, 2)
-    bench_sim["speedups"] = {k: v for k, v in summary.items() if k != "perf"}
-    with open(os.path.join(root, "BENCH_sim.json"), "w") as f:
-        json.dump(bench_sim, f, indent=1)
-    print(f"# wrote {os.path.join(root, 'bench_results.json')}")
-    print(f"# wrote {os.path.join(root, 'BENCH_sim.json')} "
-          f"(figures wall {sim_wall:.1f}s)")
-
-    if args.sweeps:
-        # sensitivity sweeps append their section to BENCH_sim.json
+    def st_sweeps():
+        # sensitivity sweeps merge their section into BENCH_sim.json
         from benchmarks import sim_sweep
-        fast = args.fast or bool(int(os.environ.get("SIM_FIGS_FAST", "0")))
-        srows, ssummary = sim_sweep.run_sweeps(list(sim_sweep._HANDLERS),
-                                               fast=fast)
-        for name, us, derived in srows:
-            print(f"{name},{us:.1f},{derived}")
-            sys.stdout.flush()
-        sim_sweep.merge_into_bench_json(
-            ssummary, os.path.join(root, "BENCH_sim.json"))
+        presets = (args.sweep_presets.split(",") if args.sweep_presets
+                   else list(sim_sweep._HANDLERS))
+        srows, ssummary = sim_sweep.run_sweeps(presets, fast=fast)
+        _print_rows(srows)
+        sim_sweep.merge_into_bench_json(ssummary, bench_sim_path)
         failed = sim_sweep.failed_checks(ssummary)
         if failed:
-            sys.exit(f"sweep ordering checks FAILED: {failed}")
+            raise RuntimeError(f"sweep ordering checks FAILED: {failed}")
+
+    def st_trace_validate():
+        from benchmarks import trace_validate
+        vrows, vsummary = trace_validate.run_validation(fast=fast)
+        _print_rows(vrows)
+        trace_validate.merge_into_bench_json(vsummary, bench_sim_path)
+        failed = trace_validate.failed_checks(vsummary)
+        if failed:
+            raise RuntimeError(f"real-trace checks FAILED: {failed}")
+
+    stage("figures", st_figures)
+    if not args.sim_only:
+        stage("kernels", st_kernels)
+    if args.sweeps:
+        stage("sweeps", st_sweeps)
+    if args.trace_validate:
+        stage("trace_validate", st_trace_validate)
+
+    if failures:
+        sys.exit(f"benchmark stages FAILED: {failures}")
 
 
 if __name__ == "__main__":

@@ -684,7 +684,18 @@ def _chunk_runner(shape: MachineShape, walk_fns: Tuple, chunk: int,
 _mechanisms.on_register(_chunk_runner.cache_clear)
 
 
-def simulate(mach: MachineConfig, trace: Dict[str, np.ndarray],
+def _resolve_trace(trace, num_cores: int, length: int | None):
+    """Accept a ``"trace:<path>"`` workload spec anywhere a trace dict
+    is expected: resolved through :func:`repro.workloads.generate_trace`
+    (which dispatches to the real-trace ingest layer), so every engine
+    entry point replays real traces with zero engine changes."""
+    if isinstance(trace, str):
+        from repro.workloads import generate_trace
+        return generate_trace(trace, num_cores, length=length)
+    return trace
+
+
+def simulate(mach: MachineConfig, trace: Dict[str, np.ndarray] | str,
              length: int | None = None, *,
              mechs: Tuple[str, ...] | None = None,
              chunk: int = DEFAULT_CHUNK) -> SimResult:
@@ -693,9 +704,11 @@ def simulate(mach: MachineConfig, trace: Dict[str, np.ndarray],
     ``mechs`` selects/orders mechanisms from the spec registry (default:
     the paper's five).  The trace is zero-padded to a multiple of
     ``chunk`` (padding is masked out of every counter) and streamed
-    through the cached chunk runner.
+    through the cached chunk runner.  ``trace`` may be a
+    ``"trace:<path>"`` spec for an ingested real trace.
     """
     names = DEFAULT_MECHS if mechs is None else tuple(mechs)
+    trace = _resolve_trace(trace, mach.num_cores, length)
 
     if mach.num_cores == 1:
         # run 1-core sims on the batch engine (padded to 2 lanes there):
@@ -766,7 +779,7 @@ def _simulate_single(mach: MachineConfig, trace: Dict[str, np.ndarray],
 
 
 def simulate_batch(mach: MachineConfig,
-                   traces: Sequence[Dict[str, np.ndarray]],
+                   traces: Sequence[Dict[str, np.ndarray] | str],
                    length: int | None = None, *,
                    mechs: Tuple[str, ...] | None = None,
                    chunk: int = DEFAULT_CHUNK,
@@ -775,9 +788,10 @@ def simulate_batch(mach: MachineConfig,
     """Run B independent simulations sharing ``mach`` as ONE batched
     chunked-scan dispatch.
 
-    ``traces`` is a sequence of trace dicts (each ``(num_cores, T_i)``);
-    lanes with shorter traces are masked with per-sim valid bits, so
-    mixed-length buckets are fine.  Results are bit-exact vs calling
+    ``traces`` is a sequence of trace dicts (each ``(num_cores, T_i)``)
+    — or ``"trace:<path>"`` specs, resolved through the real-trace
+    ingest layer; lanes with shorter traces are masked with per-sim
+    valid bits, so mixed-length buckets are fine.  Results are bit-exact vs calling
     :func:`simulate` per trace — state is laid out ``(B, C, M, sets,
     ways)`` and fused to a wider lane axis at dispatch; lanes never
     interact.  Thin wrapper over :func:`simulate_batch_varied` with
@@ -807,7 +821,7 @@ class SimJob:
     flags, walk depth) may differ per lane."""
 
     mach: MachineConfig
-    trace: Dict[str, np.ndarray]
+    trace: Dict[str, np.ndarray] | str
     mechs: Tuple[str, ...] = DEFAULT_MECHS
 
 
@@ -828,6 +842,10 @@ def simulate_batch_varied(jobs: Sequence[SimJob],
     b = len(jobs)
     if b == 0:
         return []
+    jobs = [j if not isinstance(j.trace, str)
+            else dataclasses.replace(
+                j, trace=_resolve_trace(j.trace, j.mach.num_cores, length))
+            for j in jobs]
     shape = machine_shape(jobs[0].mach)
     wf = _walk_fns(jobs[0].mechs)
     m = len(specs_for(jobs[0].mechs))

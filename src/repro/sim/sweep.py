@@ -15,7 +15,8 @@ compile.
 
 Grid axes (an ordered mapping ``name -> values``):
 
-  ``workload``    Table-II workload names (trace selection)
+  ``workload``    Table-II workload names, or ``"trace:<path>"`` for
+                  ingested real traces (see repro.workloads.ingest)
   ``machine``     "ndp" | "cpu" (Table-I machine family)
   ``cores``       core count (passed to the machine factory)
   ``mechs``       mechanism-name tuples from the spec registry
@@ -107,7 +108,9 @@ def _resolve_point(named: Dict, base: str, cores: int, workload: str,
                        f"known: {sorted(_FACTORIES)}")
     mach = _FACTORIES[family](int(named.pop("cores", cores)))
     w = named.pop("workload", workload)
-    if w not in WORKLOADS:
+    # "trace:<path>" values ingest a real trace (repro.workloads.ingest)
+    # instead of naming a Table-II generator
+    if w not in WORKLOADS and not str(w).startswith("trace:"):
         raise KeyError(f"unknown workload {w!r}")
     mnames = tuple(named.pop("mechs", mechs))
     for n in mnames:

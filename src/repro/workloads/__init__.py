@@ -1,3 +1,6 @@
 from repro.workloads.generators import (TRACE_PATTERNS,  # noqa: F401
                                         generate_trace, generate_traces,
                                         trace_cache_dir)
+from repro.workloads.ingest import (TraceFormatError,  # noqa: F401
+                                    ingest_trace, is_trace_spec,
+                                    parse_trace_spec)

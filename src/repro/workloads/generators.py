@@ -286,6 +286,12 @@ def generate_trace(workload: str, num_cores: int, length: int | None = None,
     e.g. ``"smoke"``) supplying defaults for ``length`` and ``seed`` and
     scaling the Table-II footprint; explicit ``length``/``seed`` win.
     ``use_cache=False`` bypasses the on-disk trace cache for this call.
+
+    A ``workload`` of the form ``"trace:<path>[?opt=val&...]"`` ingests
+    a REAL trace (ChampSim / Valgrind lackey / csv — see
+    :mod:`repro.workloads.ingest`) instead of generating a synthetic
+    one: ``length`` clamps it (``None`` replays the whole file),
+    ``seed`` and the footprint scale are meaningless and ignored.
     """
     from repro.configs.ndp_sim import PRESETS, WORKLOADS
     scale = 1.0
@@ -295,6 +301,11 @@ def generate_trace(workload: str, num_cores: int, length: int | None = None,
         length = preset.trace_len if length is None else length
         seed = preset.seed if seed is None else seed
         scale = preset.footprint_scale
+    if workload.startswith("trace:"):
+        from repro.workloads.ingest import ingest_trace, parse_trace_spec
+        path, opts = parse_trace_spec(workload)
+        return ingest_trace(path, num_cores, length=length,
+                            use_cache=use_cache, **opts)
     if length is None:
         raise TypeError("generate_trace needs `length` or a `preset`")
     if seed is None:

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Regenerate the committed fixture traces in this directory.
+
+The fixtures are REAL-FORMAT files (a ChampSim binary trace and a
+Valgrind lackey text trace) small enough to commit (<200KB each), with
+access structure matching their paired synthetic generators so
+``benchmarks/trace_validate.py`` has a meaningful comparison:
+
+* ``gups_small.champsim.xz``  — GUPS-style uniform random updates over
+  a 2GB table (pairs with workload ``rnd``)
+* ``graph_small.lackey.gz``   — power-law hot-vertex reads + sequential
+  CSR scans over an 8GB graph (pairs with workload ``bc``)
+
+Generation is fully seeded — rerunning this script must be a no-op for
+git.  The files are hermetic CI ground truth: the ingest parsers, the
+``trace:`` plumbing, and the real-vs-synthetic validation all replay
+them without any network or toolchain dependency.
+
+Usage:  python tests/fixtures/traces/make_fixtures.py
+"""
+from __future__ import annotations
+
+import gzip
+import lzma
+import os
+import sys
+
+import numpy as np
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                     "..", "..", ".."))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.workloads.ingest.champsim import RECORD_DTYPE  # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def make_gups_champsim(path: str, n_records: int = 9000) -> None:
+    """GUPS: ~78% of instructions carry one random 8B load into a 2GB
+    table; 15% of those immediately store back (read-modify-write);
+    the rest are pure compute (index arithmetic)."""
+    rng = np.random.default_rng(20260731)
+    rec = np.zeros(n_records, RECORD_DTYPE)
+    rec["ip"] = 0x401000 + 4 * (np.arange(n_records) % 4096)
+    table_base = 0x10_0000_0000
+    has_mem = rng.random(n_records) < 0.78
+    addr = table_base + rng.integers(0, (2 << 30) // 8, n_records) * 8
+    rec["src_mem"][has_mem, 0] = addr[has_mem]
+    rmw = has_mem & (rng.random(n_records) < 0.15)
+    rec["dst_mem"][rmw, 0] = addr[rmw]
+    with lzma.open(path, "wb", preset=9) as f:
+        f.write(rec.tobytes())
+
+
+def make_graph_lackey(path: str, n_accesses: int = 11000) -> None:
+    """GraphBIG-style bc: 50% power-law hot-vertex property reads
+    (degree-renumbered => hot ids contiguous), 35% sequential CSR edge
+    scans (runs of 8 lines), 15% cold neighbour reads, over an 8GB
+    graph; 2-6 'I' instruction-fetch lines between accesses."""
+    rng = np.random.default_rng(988271)
+    pages = 8 << 18                       # 8GB of 4KB pages
+    total_lines = pages * 64
+    kind = rng.choice(3, n_accesses, p=(0.5, 0.35, 0.15))
+    lines = np.empty(n_accesses, np.int64)
+    hot = kind == 0
+    u = rng.random(n_accesses)
+    lines[hot] = np.minimum((total_lines * u[hot] ** 4.2).astype(np.int64),
+                            total_lines - 1)
+    seq = np.flatnonzero(kind == 1)
+    starts = rng.integers(0, pages, seq.size // 8 + 1) * 64
+    lines[seq] = starts[np.arange(seq.size) // 8] + np.arange(seq.size) % 8
+    cold = kind == 2
+    lines[cold] = rng.integers(0, total_lines, int(cold.sum()))
+    addr = 0x2000_0000 + lines * 64 + rng.integers(0, 8, n_accesses) * 8
+    is_store = rng.random(n_accesses) < 0.12
+    work = rng.integers(2, 7, n_accesses)
+    out = []
+    ip = 0x400000
+    for i in range(n_accesses):
+        for _ in range(int(work[i])):
+            out.append(f"I  {ip:08x},4\n")
+            ip = 0x400000 + (ip + 4 - 0x400000) % 16384
+        op = "S" if is_store[i] else "L"
+        out.append(f" {op} {addr[i]:010x},8\n")
+    # GzipFile with mtime=0: byte-identical output run over run
+    with open(path, "wb") as raw, gzip.GzipFile(
+            fileobj=raw, mode="wb", compresslevel=9, mtime=0) as f:
+        f.write("".join(out).encode("ascii"))
+
+
+def main() -> None:
+    targets = {
+        "gups_small.champsim.xz": make_gups_champsim,
+        "graph_small.lackey.gz": make_graph_lackey,
+    }
+    for name, fn in targets.items():
+        path = os.path.join(HERE, name)
+        fn(path)
+        kb = os.path.getsize(path) / 1024
+        assert kb < 200, f"{name}: {kb:.0f}KB exceeds the 200KB budget"
+        print(f"wrote {name}: {kb:.1f}KB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,302 @@
+"""Real-trace ingestion tests (ISSUE-4).
+
+Edge cases: truncated/corrupt records, gz vs xz vs plain parity, empty
+traces, page-size override changing the vpn split, interleaving modes,
+cache hits bit-exact vs cold parses — plus the acceptance criterion:
+the committed fixture traces replay through ``simulate_batch`` and
+``sweep()`` bit-exactly cached vs uncached.
+"""
+import dataclasses
+import gzip
+import lzma
+import os
+
+import numpy as np
+import pytest
+
+from repro.workloads import generate_trace
+from repro.workloads.ingest import (TraceFormatError, detect_format,
+                                    ingest_trace, parse_trace_spec)
+from repro.workloads.ingest.champsim import RECORD_DTYPE
+
+FIXDIR = os.path.join(os.path.dirname(__file__), "fixtures", "traces")
+GUPS_FIX = os.path.join(FIXDIR, "gups_small.champsim.xz")
+GRAPH_FIX = os.path.join(FIXDIR, "graph_small.lackey.gz")
+
+
+# ---------------------------------------------------------------------------
+# synthetic trace-file builders
+# ---------------------------------------------------------------------------
+def champsim_records(n=600, seed=0, mem_prob=0.8):
+    """A deterministic ChampSim record array: ~mem_prob of instructions
+    carry one source memory access over a small sequential+random mix."""
+    rng = np.random.default_rng(seed)
+    rec = np.zeros(n, RECORD_DTYPE)
+    rec["ip"] = 0x400000 + 4 * np.arange(n)
+    has = rng.random(n) < mem_prob
+    addr = 0x7f0000000 + rng.integers(0, 1 << 20, n) * 64
+    rec["src_mem"][has, 0] = addr[has]
+    return rec
+
+
+def write_champsim(path, rec):
+    raw = rec.tobytes()
+    if str(path).endswith(".xz"):
+        with lzma.open(path, "wb") as f:
+            f.write(raw)
+    elif str(path).endswith(".gz"):
+        with gzip.open(path, "wb") as f:
+            f.write(raw)
+    else:
+        with open(path, "wb") as f:
+            f.write(raw)
+    return str(path)
+
+
+# ---------------------------------------------------------------------------
+# parsing + robustness
+# ---------------------------------------------------------------------------
+class TestParsers:
+    def test_gz_xz_plain_parity(self, tmp_path):
+        """The same records must ingest identically from .xz, .gz and
+        uncompressed files (the sha256 cache key differs, the parse
+        must not)."""
+        rec = champsim_records()
+        traces = []
+        for suffix in ("a.champsim", "b.champsim.gz", "c.champsim.xz"):
+            p = write_champsim(tmp_path / suffix, rec)
+            traces.append(ingest_trace(p, 2, length=100, use_cache=False))
+        for t in traces[1:]:
+            for k in ("vpn", "off", "work"):
+                np.testing.assert_array_equal(traces[0][k], t[k])
+            assert t["pages"] == traces[0]["pages"]
+
+    def test_truncated_champsim_record_raises(self, tmp_path):
+        rec = champsim_records(100)
+        p = tmp_path / "trunc.champsim"
+        with open(p, "wb") as f:
+            f.write(rec.tobytes()[:-13])        # tear the last record
+        with pytest.raises(TraceFormatError, match="truncated"):
+            ingest_trace(str(p), 2, use_cache=False)
+
+    def test_empty_and_memoryless_traces_raise(self, tmp_path):
+        empty = tmp_path / "empty.champsim"
+        empty.write_bytes(b"")
+        with pytest.raises(TraceFormatError, match="no memory accesses"):
+            ingest_trace(str(empty), 2, use_cache=False)
+        # records parse fine but none carries a memory operand
+        rec = champsim_records(50, mem_prob=0.0)
+        p = write_champsim(tmp_path / "nomem.champsim", rec)
+        with pytest.raises(TraceFormatError, match="no memory accesses"):
+            ingest_trace(p, 2, use_cache=False)
+
+    def test_corrupt_lackey_line_raises(self, tmp_path):
+        p = tmp_path / "bad.lackey"
+        p.write_text("I  04000000,3\n L 04e2b848,8\nXYZZY 123\n")
+        with pytest.raises(TraceFormatError, match="bad.lackey:3"):
+            ingest_trace(str(p), 1, use_cache=False)
+        p.write_text(" L nothex,8\n")
+        with pytest.raises(TraceFormatError, match="bad lackey address"):
+            ingest_trace(str(p), 1, use_cache=False)
+
+    def test_lackey_work_counts_instruction_fetches(self, tmp_path):
+        p = tmp_path / "w.lackey"
+        p.write_text("I  04000000,3\nI  04000004,3\n L 00001000,8\n"
+                     " S 00002000,8\nI  04000008,3\n M 00003000,4\n")
+        tr = ingest_trace(str(p), 1, use_cache=False)
+        assert tr["work"].tolist() == [[2, 0, 1]]
+
+    def test_csv_header_and_positional(self, tmp_path):
+        h = tmp_path / "h.csv"
+        h.write_text("tid,addr,work\n0,0x1000,3\n1,0x2000,2\n"
+                     "0,0x1040,1\n1,0x2040,4\n")
+        tr = ingest_trace(str(h), 2, interleave="thread", use_cache=False)
+        assert tr["vpn"].shape == (2, 2)
+        assert tr["work"].tolist() == [[3, 1], [2, 4]]
+        pos = tmp_path / "p.csv"
+        pos.write_text("0x1000\n0x2000\n0x1040\n0x2040\n")
+        tr2 = ingest_trace(str(pos), 2, use_cache=False)   # round-robin
+        assert tr2["vpn"].shape == (2, 2)
+
+    def test_csv_bad_rows_raise(self, tmp_path):
+        p = tmp_path / "bad.csv"
+        p.write_text("addr,work\n0x1000,1\n0x2000\n")
+        with pytest.raises(TraceFormatError, match="expected 2 fields"):
+            ingest_trace(str(p), 1, use_cache=False)
+        p.write_text("addr,nope\n0x1000,1\n")
+        with pytest.raises(TraceFormatError, match="unknown column"):
+            ingest_trace(str(p), 1, use_cache=False)
+
+    def test_detect_format_and_spec_parsing(self):
+        assert detect_format("x.champsim.xz") == "champsim"
+        assert detect_format("runs/app.trace.gz") == "champsim"
+        assert detect_format("mem.lackey.gz") == "lackey"
+        assert detect_format("t.csv") == "csv"
+        with pytest.raises(TraceFormatError, match="cannot infer"):
+            detect_format("mystery.bin")
+        path, opts = parse_trace_spec(
+            "trace:/tmp/a.csv?interleave=thread&page_bytes=8192")
+        assert path == "/tmp/a.csv"
+        assert opts == {"interleave": "thread", "page_bytes": 8192}
+        with pytest.raises(ValueError, match="bad option"):
+            parse_trace_spec("trace:/tmp/a.csv?nope=1")
+
+
+# ---------------------------------------------------------------------------
+# pipeline semantics
+# ---------------------------------------------------------------------------
+class TestPipeline:
+    def test_page_size_override_changes_vpn_split(self, tmp_path):
+        """A sequential 128KB scan: doubling the page size must halve
+        the distinct vpns and widen the line-offset range."""
+        p = tmp_path / "seq.csv"
+        p.write_text("\n".join(f"0x{0x100000 + 64 * i:x}"
+                               for i in range(2048)))
+        t4k = ingest_trace(str(p), 1, use_cache=False)
+        t8k = ingest_trace(str(p), 1, page_bytes=8192, use_cache=False)
+        assert np.unique(t4k["vpn"]).size == 32
+        assert np.unique(t8k["vpn"]).size == 16
+        assert t4k["off"].max() == 63
+        assert t8k["off"].max() == 127
+
+    def test_gap_capped_remap_preserves_adjacency(self, tmp_path):
+        """Pages adjacent in the address space stay adjacent; a huge
+        address-space gap collapses to gap_cap pages."""
+        p = tmp_path / "gap.csv"
+        addrs = [0x1000 * v for v in (5, 6, 7)] + [0x7f00000000000]
+        p.write_text("\n".join(f"0x{a:x}" for a in addrs))
+        tr = ingest_trace(str(p), 1, use_cache=False, gap_cap=512)
+        assert tr["vpn"][0].tolist() == [0, 1, 2, 2 + 512]
+        assert tr["pages"] == 515
+
+    def test_interleave_modes(self, tmp_path):
+        p = tmp_path / "i.csv"
+        p.write_text("\n".join(f"0x{0x1000 * i:x}" for i in range(8)))
+        rr = ingest_trace(str(p), 2, use_cache=False, gap_cap=1)
+        assert rr["vpn"].tolist() == [[0, 2, 4, 6], [1, 3, 5, 7]]
+        bl = ingest_trace(str(p), 2, use_cache=False, gap_cap=1,
+                          interleave="blocked")
+        assert bl["vpn"].tolist() == [[0, 1, 2, 3], [4, 5, 6, 7]]
+        with pytest.raises(TraceFormatError, match="tid column"):
+            ingest_trace(str(p), 2, use_cache=False, interleave="thread")
+
+    def test_length_clamp_and_too_short(self, tmp_path):
+        p = tmp_path / "s.csv"
+        p.write_text("\n".join(f"0x{0x1000 * i:x}" for i in range(10)))
+        tr = ingest_trace(str(p), 2, length=3, use_cache=False)
+        assert tr["vpn"].shape == (2, 3)
+        with pytest.raises(TraceFormatError, match="too short"):
+            ingest_trace(str(p), 16, use_cache=False)
+
+    def test_work_clip(self, tmp_path):
+        p = tmp_path / "w.lackey"
+        p.write_text("".join("I  04000000,3\n" for _ in range(500))
+                     + " L 00001000,8\n L 00002000,8\n")
+        tr = ingest_trace(str(p), 1, use_cache=False, work_clip=64)
+        assert tr["work"].max() == 64
+
+    def test_bad_options_raise(self, tmp_path):
+        p = tmp_path / "a.csv"
+        p.write_text("0x1000\n0x2000\n")
+        with pytest.raises(ValueError, match="power of two"):
+            ingest_trace(str(p), 1, page_bytes=3000, use_cache=False)
+        with pytest.raises(ValueError, match="gap_cap"):
+            ingest_trace(str(p), 1, gap_cap=0, use_cache=False)
+        with pytest.raises(ValueError, match="work_clip"):
+            ingest_trace(str(p), 1, work_clip=-5, use_cache=False)
+        with pytest.raises(ValueError, match="unknown interleave"):
+            ingest_trace(str(p), 1, interleave="zigzag", use_cache=False)
+        with pytest.raises(TraceFormatError, match="unknown trace format"):
+            ingest_trace(str(p), 1, fmt="elf", use_cache=False)
+
+
+# ---------------------------------------------------------------------------
+# caching
+# ---------------------------------------------------------------------------
+class TestCache:
+    def test_cache_hit_bit_exact_vs_cold_parse(self, tmp_path,
+                                               monkeypatch):
+        monkeypatch.setenv("SIM_TRACE_CACHE", str(tmp_path / "cache"))
+        p = write_champsim(tmp_path / "t.champsim.xz", champsim_records())
+        cold = ingest_trace(p, 2, length=64)
+        files = list((tmp_path / "cache").iterdir())
+        assert len(files) == 1 and files[0].name.startswith("ingest_")
+        warm = ingest_trace(p, 2, length=64)            # served from npz
+        nocache = ingest_trace(p, 2, length=64, use_cache=False)
+        for k in ("vpn", "off", "work"):
+            np.testing.assert_array_equal(cold[k], warm[k])
+            np.testing.assert_array_equal(cold[k], nocache[k])
+        assert cold["pages"] == warm["pages"] == nocache["pages"]
+
+    def test_cache_key_covers_file_content_and_options(self, tmp_path,
+                                                       monkeypatch):
+        """Editing the trace file or any pipeline option must miss the
+        cache (fresh npz), never serve the stale entry."""
+        monkeypatch.setenv("SIM_TRACE_CACHE", str(tmp_path / "cache"))
+        p = write_champsim(tmp_path / "t.champsim", champsim_records())
+        ingest_trace(p, 2, length=64)
+        ingest_trace(p, 2, length=64, page_bytes=8192)
+        assert len(list((tmp_path / "cache").iterdir())) == 2
+        write_champsim(p, champsim_records(seed=9))     # new content
+        ingest_trace(p, 2, length=64)
+        assert len(list((tmp_path / "cache").iterdir())) == 3
+
+
+# ---------------------------------------------------------------------------
+# acceptance: fixtures through the engines, cached vs uncached
+# ---------------------------------------------------------------------------
+def _assert_results_equal(a, b, msg=""):
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb,
+                                          err_msg=f"{msg}: {f.name}")
+        else:
+            assert va == vb, f"{msg}: {f.name}"
+
+
+class TestEngineAcceptance:
+    def test_fixtures_exist_and_ingest(self):
+        for path in (GUPS_FIX, GRAPH_FIX):
+            assert os.path.getsize(path) < 200 * 1024
+            tr = generate_trace(f"trace:{path}", 2, length=256,
+                                use_cache=False)
+            assert tr["vpn"].shape == (2, 256)
+            assert (tr["vpn"] >= 0).all()
+            assert (tr["vpn"] < tr["pages"]).all()
+            assert (tr["off"] >= 0).all() and (tr["off"] < 64).all()
+
+    def test_fixture_replay_cached_vs_uncached_bit_exact(self, tmp_path,
+                                                         monkeypatch):
+        """ISSUE-4 acceptance: the committed fixtures replay through
+        simulate_batch and sweep() bit-exactly cached vs uncached."""
+        from repro.configs.ndp_sim import ndp_machine
+        from repro.sim import simulate_batch, sweep
+
+        monkeypatch.setenv("SIM_TRACE_CACHE", str(tmp_path / "cache"))
+        specs = [f"trace:{GUPS_FIX}", f"trace:{GRAPH_FIX}"]
+        mach = ndp_machine(2)
+        cold = simulate_batch(mach, specs, length=384)   # parses + caches
+        warm = simulate_batch(mach, specs, length=384)   # cache npz
+        for c, w, s in zip(cold, warm, specs):
+            _assert_results_equal(c, w, s)
+
+        grid = {"workload": tuple(specs)}
+        r_warm = sweep(grid, cores=2, trace_len=384, chunk=512)
+        monkeypatch.setenv("SIM_TRACE_CACHE", "0")
+        r_cold = sweep(grid, cores=2, trace_len=384, chunk=512)
+        assert r_warm.stats["buckets"] == 1
+        for s in specs:
+            _assert_results_equal(r_warm.point(workload=s),
+                                  r_cold.point(workload=s), s)
+
+    def test_real_trace_beats_radix_with_ndpage(self, tmp_path,
+                                                monkeypatch):
+        """The paper's effect on a REAL trace: NDPage >= radix."""
+        from repro.configs.ndp_sim import ndp_machine
+        from repro.sim import simulate
+
+        monkeypatch.setenv("SIM_TRACE_CACHE", str(tmp_path))
+        res = simulate(ndp_machine(2), f"trace:{GUPS_FIX}", length=512)
+        assert res.speedup_vs()["ndpage"] >= 1.0
+        assert res.scalar("tlb_miss_rate", "radix") > 0.5
