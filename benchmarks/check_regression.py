@@ -10,10 +10,22 @@ it, so an XLA-cache miss — every ``src/repro`` change invalidates the
 CI cache key — cannot masquerade as an engine regression; it falls back
 to ``steps_per_sec`` for older baselines.
 
+The env fingerprint is a RUNNER CLASS, not raw hardware: CI sets
+``PERF_RUNNER_CLASS`` (nightly and refresh-baseline use the same
+value), local runs default to ``cpu<count>``.  Matching class + matching
+SIM_DEVICES arms the gate (fail-loud); anything else skips with a
+notice, because comparing against a baseline from different hardware
+gates the machine, not the change.
+
 Refresh the baseline after an intentional perf change with::
 
     python benchmarks/run.py --fast --sim-only
     python benchmarks/check_regression.py --update
+
+(or dispatch the ``refresh-baseline`` CI workflow, which runs both on
+the hosted-runner class and uploads the artifact to commit).  The
+committed baseline records where it was actually measured in
+``measured_on``.
 """
 from __future__ import annotations
 
@@ -26,8 +38,12 @@ import sys
 def _env_fingerprint() -> dict:
     """What the throughput numbers depend on besides the code: comparing
     against a baseline from different hardware gates the machine, not
-    the change."""
-    return {"cpu_count": os.cpu_count(),
+    the change.  The class is an explicit label (PERF_RUNNER_CLASS, set
+    by CI) so a baseline built FOR the hosted-runner class arms the
+    nightly gate; without the label it falls back to the host's CPU
+    count, keeping ad-hoc local comparisons honest."""
+    return {"class": (os.environ.get("PERF_RUNNER_CLASS")
+                      or f"cpu{os.cpu_count()}"),
             "sim_devices": os.environ.get("SIM_DEVICES", "")}
 
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
@@ -57,6 +73,11 @@ def main(argv=None) -> int:
                  "figures_wall_s") if k in cur}
         base["stages"] = cur.get("stages", {})
         base["env"] = _env_fingerprint()
+        # provenance: where the numbers were ACTUALLY measured (the env
+        # class above is the intended comparison target)
+        base["measured_on"] = {"cpu_count": os.cpu_count(),
+                               "sim_devices": os.environ.get(
+                                   "SIM_DEVICES", "")}
         with open(args.baseline, "w") as f:
             json.dump(base, f, indent=1)
         print(f"baseline updated: {args.baseline} "

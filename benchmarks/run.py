@@ -13,6 +13,8 @@ Sections (stages):
                 ``--sweep-presets a,b`` selects a subset
   * --trace-validate: real-vs-synthetic trace comparison
                 (benchmarks/trace_validate.py)
+  * --serving:  translation-costed serving throughput per mechanism
+                (benchmarks/serving_translation.py)
 
 ``--fast`` (or SIM_FIGS_FAST=1) runs the simulator figures on the smoke
 preset — same engine and orderings, CI wall-clock.  ``--sim-only`` skips
@@ -85,6 +87,9 @@ def main(argv=None) -> None:
     p.add_argument("--trace-validate", action="store_true",
                    help="also run the real-vs-synthetic trace "
                         "validation (benchmarks/trace_validate.py)")
+    p.add_argument("--serving", action="store_true",
+                   help="also run the translation-costed serving "
+                        "benchmark (benchmarks/serving_translation.py)")
     args = p.parse_args(argv)
     if args.fast:
         os.environ["SIM_FIGS_FAST"] = "1"
@@ -172,6 +177,23 @@ def main(argv=None) -> None:
         if failed:
             raise RuntimeError(f"real-trace checks FAILED: {failed}")
 
+    def st_serving():
+        from benchmarks import serving_translation
+        # always the FULL request mixes: --fast trims the simulator
+        # figure preset, but the serving mixes are cheap even at full
+        # size and the PR lane already covers the smoke variant
+        # (serving_translation.py --smoke --pinned).  source="sweep"
+        # makes a broken cost-model derivation FAIL the stage rather
+        # than silently serving the pinned fallback.
+        srows, ssummary = serving_translation.run_serving(
+            fast=False, source="sweep")
+        _print_rows(srows)
+        serving_translation.merge_into_bench_json(ssummary,
+                                                  bench_sim_path)
+        failed = serving_translation.failed_checks(ssummary)
+        if failed:
+            raise RuntimeError(f"serving ordering checks FAILED: {failed}")
+
     stage("figures", st_figures)
     if not args.sim_only:
         stage("kernels", st_kernels)
@@ -179,6 +201,8 @@ def main(argv=None) -> None:
         stage("sweeps", st_sweeps)
     if args.trace_validate:
         stage("trace_validate", st_trace_validate)
+    if args.serving:
+        stage("serving", st_serving)
 
     if failures:
         sys.exit(f"benchmark stages FAILED: {failures}")

@@ -6,6 +6,12 @@ allocation, occupancy-driven table flattening, and the translation cache.
 Usage:
   PYTHONPATH=src python examples/serve_paged.py [--arch gemma3-1b]
       [--requests 12] [--table-mode auto|paged_flat|paged_radix]
+      [--costed]
+
+``--costed`` attaches the simulator-derived translation cost model
+(pinned table — no simulator run) and prints tokens/sec under every
+translation mechanism, the paper's end-to-end claim at the serving
+layer (see docs/serving.md).
 """
 import argparse
 import dataclasses
@@ -27,6 +33,9 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--table-mode", default="auto",
                     choices=["auto", "paged_flat", "paged_radix"])
+    ap.add_argument("--costed", action="store_true",
+                    help="price translations with the pinned cost "
+                         "model and report per-mechanism tokens/sec")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(smoke_variant(get_arch(args.arch)),
@@ -35,8 +44,13 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     mode = None if args.table_mode == "auto" else args.table_mode
+    cost_model = None
+    if args.costed:
+        from repro.sim import TranslationCostModel
+        cost_model = TranslationCostModel.pinned()
     eng = ServeEngine(cfg, params, max_batch=args.max_batch, max_len=96,
-                      page_size=8, table_mode=mode)
+                      page_size=8, table_mode=mode,
+                      cost_model=cost_model)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -57,6 +71,13 @@ def main():
     for r in done[:3]:
         print(f"  req {r.req_id}: prompt={r.prompt.tolist()} -> "
               f"{r.generated}")
+    if cost_model is not None:
+        rep = eng.throughput()
+        print(f"translation-costed throughput "
+              f"(model={cost_model.machine}, {cost_model.source}):")
+        for m, v in rep["tokens_per_sec"].items():
+            print(f"  {m:10s} {v:14.0f} tok/s  "
+                  f"trans={rep['translation_cycles'][m]:.0f}cyc")
 
 
 if __name__ == "__main__":

@@ -197,6 +197,31 @@ SWEEPS: Dict[str, dict] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# translation-costed serving preset (consumed by repro.sim.cost_model and
+# benchmarks/serving_translation.py)
+# ---------------------------------------------------------------------------
+#: The machine/workload point the serving cost table is derived from,
+#: plus the serving model's compute budget.  Plain data, like SWEEPS.
+#:
+#: * machine/cores — the serving machine (NDP logic-layer cores run the
+#:   paged-KV engine in this scenario; 4 cores = the paper's midpoint)
+#: * workload — the trace whose access structure prices the walks:
+#:   dlrm (embedding-bag bursts) is the closest Table-II analogue of
+#:   paged-KV gathers
+#: * mechs — mechanism order every serving report follows
+#: * model_cycles_per_token — non-translation compute per decoded token
+#:   on the serving cores; sized so translation is a visible-but-minor
+#:   fraction (the paper's regime: tens of percent at the extremes)
+SERVING_COST: Dict[str, object] = dict(
+    machine="ndp", cores=4,
+    workload="dlrm",
+    mechs=("radix", "ech", "hugepage", "ndpage", "ideal"),
+    preset="smoke",
+    model_cycles_per_token=1500.0,
+)
+
+
 def __getattr__(name: str):
     # MECHANISMS is sourced from the one spec registry (repro.sim.mechanisms)
     # but resolved lazily: the simulator imports this module for

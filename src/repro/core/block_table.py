@@ -28,6 +28,10 @@ import jax.numpy as jnp
 FLAT = "paged_flat"
 RADIX = "paged_radix"
 
+#: int32 table entries per 64B cache line — the granularity the costed
+#: translate variants count "touched PTE lines" at
+PTE_PER_LINE = 16
+
 
 @dataclass
 class RadixTable:
@@ -80,6 +84,79 @@ def translate_one(table, seq_idx: jnp.ndarray, logical_page: jnp.ndarray,
         ls = table.leaf_size
         leaf_id = table.directory[seq_idx, logical_page // ls]
         return table.leaves[jnp.maximum(leaf_id, 0), logical_page % ls]
+    raise ValueError(mode)
+
+
+def _lines_of(mapped: jnp.ndarray) -> jnp.ndarray:
+    """Touched 64B lines of a line-aligned entry span: ``mapped`` is
+    (..., n) bool over consecutive int32 entries starting at a line
+    boundary; returns (...,) counts of 16-entry groups with any mapped
+    entry."""
+    n = mapped.shape[-1]
+    pad = (-n) % PTE_PER_LINE
+    m = jnp.pad(mapped, [(0, 0)] * (mapped.ndim - 1) + [(0, pad)])
+    groups = m.reshape(m.shape[:-1] + (-1, PTE_PER_LINE))
+    return groups.any(-1).sum(-1).astype(jnp.int32)
+
+
+def count_pte_lines(table, mode: str) -> jnp.ndarray:
+    """The translation COST signal alone: how many distinct PTE cache
+    lines (64B, :data:`PTE_PER_LINE` entries) a full row rebuild
+    touches per sequence, (B,) int32.
+
+    Line counting follows each organization's allocation story:
+
+    * flat: the row is ONE contiguous span, so logical pages that would
+      sit in different radix leaves share lines — the NDPage merge's
+      locality win.
+    * radix: the directory row is contiguous, but every leaf table is
+      its own line-aligned allocation (the OS places each tree node on
+      its own page) — leaves never share lines with each other, though
+      a PREFIX-SHARED leaf referenced by several directory entries of
+      one sequence is only walked (and counted) once.
+    """
+    if mode == FLAT:
+        return _lines_of(table >= 0)
+    if mode == RADIX:
+        dir_ = table.directory                        # (B, n_dir)
+        n_dir = dir_.shape[-1]
+        dir_lines = _lines_of(dir_ >= 0)
+        gathered = table.leaves[jnp.maximum(dir_, 0)]  # (B, n_dir, ls)
+        valid = dir_ >= 0
+        mapped = (gathered >= 0) & valid[..., None]
+        # drop repeat references to a shared leaf: entry d is a dup if
+        # an earlier valid entry e < d names the same leaf table
+        same = (dir_[:, :, None] == dir_[:, None, :]) \
+            & valid[:, :, None] & valid[:, None, :]
+        j = jnp.arange(n_dir)
+        dup = (same & (j[:, None] > j[None, :])).any(-1)  # (B, n_dir)
+        mapped = mapped & ~dup[..., None]
+        leaf_lines = _lines_of(mapped)                 # (B, n_dir)
+        return dir_lines + leaf_lines.sum(-1).astype(jnp.int32)
+    raise ValueError(mode)
+
+
+def translate_all_costed(table, mode: str
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`translate_all` (bit-exact) plus
+    :func:`count_pte_lines` — the costed rebuild used by the
+    translation-metered serving path."""
+    return translate_all(table, mode), count_pte_lines(table, mode)
+
+
+def translate_one_costed(table, seq_idx: jnp.ndarray,
+                         logical_page: jnp.ndarray, mode: str
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`translate_one` plus touched-PTE-line counts, (B,) int32:
+    a flat lookup reads one line; a radix lookup reads a directory line
+    and — when the directory entry is mapped — the leaf's line."""
+    phys = translate_one(table, seq_idx, logical_page, mode)
+    if mode == FLAT:
+        return phys, jnp.ones_like(seq_idx, jnp.int32)
+    if mode == RADIX:
+        leaf_id = table.directory[seq_idx,
+                                  logical_page // table.leaf_size]
+        return phys, jnp.where(leaf_id >= 0, 2, 1).astype(jnp.int32)
     raise ValueError(mode)
 
 

@@ -9,6 +9,14 @@ append path as decoding — there is no separate prefill code to diverge.
 Requests are admitted with ONE initial page; pages are allocated by the
 scheduler as lengths grow (the OS role).  The kv table mode is either
 pinned or occupancy-driven (the NDPage flatten decision).
+
+Translation-costed mode: pass ``cost_model`` (a
+:class:`repro.sim.cost_model.TranslationCostModel`) and every scheduler
+step is priced under ALL simulated mechanisms at once — cache hits at
+TLB-hit cost, misses at each mechanism's walk cost plus the touched-
+PTE-line surcharge of the rebuilt row.  ONE decode loop serves every
+mechanism (the mechanism never enters the jit, so nothing recompiles);
+:meth:`ServeEngine.throughput` then reports tokens/sec per mechanism.
 """
 from __future__ import annotations
 
@@ -28,7 +36,7 @@ from repro.serving.scheduler import BatchScheduler, Request
 class ServeEngine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  max_len: int = 256, page_size: int = 16,
-                 table_mode: Optional[str] = None):
+                 table_mode: Optional[str] = None, cost_model=None):
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
@@ -36,8 +44,13 @@ class ServeEngine:
         max_pages_total = max_batch * (-(-max_len // page_size)) + 8
         self.kvm = KVPageManager(max_pages_total, page_size, max_batch,
                                  max_len)
+        self.meter = None
+        if cost_model is not None:
+            from repro.sim.cost_model import TranslationMeter
+            self.meter = TranslationMeter(cost_model)
         self.sched = BatchScheduler(self.kvm, max_batch,
-                                    table_mode=table_mode)
+                                    table_mode=table_mode,
+                                    meter=self.meter)
         self.max_batch = max_batch
         self.state = init_decode_state(cfg, max_batch, max_len,
                                        kv_mode=BT.FLAT, page_size=page_size)
@@ -65,6 +78,24 @@ class ServeEngine:
                 continue
             finished.extend(self._engine_step())
         return finished
+
+    def throughput(self) -> Dict:
+        """Per-mechanism serving report (requires ``cost_model``):
+        tokens/sec, accumulated translation cycles, the PER-STEP budget
+        (mean/max over the meter's retained step window — misses make
+        spiky steps), and the hit/miss tallies — one decode run priced
+        under every mechanism."""
+        if self.meter is None:
+            raise ValueError("ServeEngine was built without a cost_model;"
+                             " pass cost_model= to enable throughput()")
+        m = self.meter
+        return {
+            "tokens_per_sec": m.tokens_per_sec(),
+            "translation_cycles": m.translation_cycles(),
+            "per_step_cycles": m.per_step_cycles(),
+            "tokens": m.tokens, "steps": m.steps,
+            "tcache_hits": m.hits, "tcache_misses": m.misses,
+        }
 
     # -- internals --------------------------------------------------------------
     def _engine_step(self) -> List[Request]:

@@ -6,7 +6,15 @@ KVPageManager, and — NDPage's runtime decision — picks the table
 organization per step from measured occupancy (flat once occupancy crosses
 the threshold, which for dense decode is immediately; radix only helps
 sparse/prefix-shared mappings).  Table rows are memoized in the
-TranslationCache (the PWC analogue) keyed by (seq, version).
+TranslationCache (the PWC analogue) keyed by (seq, version); the cache
+owns the version counters (bumped on mapping growth and on invalidate).
+
+When the engine runs translation-costed (a
+:class:`repro.sim.cost_model.TranslationMeter` is attached), every
+``step_tables`` call also prices the step: a cache hit costs the
+mechanism's TLB-hit cycles, a miss costs its walk plus the touched-PTE-
+line surcharge of the rebuilt row — accumulated per step and per
+request for ALL mechanisms at once (see cost_model docs).
 """
 from __future__ import annotations
 
@@ -35,7 +43,7 @@ class Request:
 
 class BatchScheduler:
     def __init__(self, kvm: KVPageManager, max_batch: int,
-                 table_mode: Optional[str] = None):
+                 table_mode: Optional[str] = None, meter=None):
         self.kvm = kvm
         self.max_batch = max_batch
         self.queue: Deque[Request] = deque()
@@ -44,7 +52,9 @@ class BatchScheduler:
         self.free_slots = list(range(max_batch - 1, -1, -1))
         self.table_mode = table_mode          # None = occupancy-driven
         self.tcache = TranslationCache(capacity=4 * max_batch)
-        self.versions: Dict[int, int] = {}
+        #: optional repro.sim.cost_model.TranslationMeter — when set,
+        #: every step's lookups are priced under all mechanisms
+        self.meter = meter
         self.stats = {"admitted": 0, "completed": 0, "preempted": 0,
                       "steps": 0}
 
@@ -65,7 +75,6 @@ class BatchScheduler:
             self.kvm.add_sequence(req.req_id, len(req.prompt))
             self.running[req.req_id] = req
             self.slot_of[req.req_id] = slot
-            self.versions[req.req_id] = 0
             self.stats["admitted"] += 1
             admitted.append((slot, req))
         return admitted
@@ -79,19 +88,28 @@ class BatchScheduler:
         mode = self.table_mode or self.kvm.preferred_mode()
         seqs = self.active_seqs()
         rows = []
-        for sid in seqs:
-            ver = self.versions[sid]
-            row = self.tcache.lookup(sid, ver)
+        hits = np.zeros(len(seqs), bool)
+        for i, sid in enumerate(seqs):
+            row = self.tcache.lookup(sid)
             if row is None:
                 pages = self.kvm.pages[sid]
                 row = np.full(self.kvm.max_pages, -1, np.int32)
                 row[: len(pages)] = pages
-                self.tcache.insert(sid, ver, row)
+                self.tcache.insert(sid, None, row)
+            else:
+                hits[i] = True
             rows.append(row)
         lengths = np.asarray([self.kvm.lengths[s] for s in seqs], np.int32)
         self.stats["steps"] += 1
-        return mode, np.stack(rows) if rows else np.zeros(
-            (0, self.kvm.max_pages), np.int32), lengths
+        stacked = (np.stack(rows) if rows
+                   else np.zeros((0, self.kvm.max_pages), np.int32))
+        if self.meter is not None and rows:
+            # price the step: a hit is the TLB-hit analogue, a miss a
+            # table walk whose cost scales with the touched PTE lines
+            # of the rebuilt row under each mechanism's organization
+            self.meter.record_step(seqs, hits, stacked,
+                                   self.kvm.leaf_size)
+        return mode, stacked, lengths
 
     def record_tokens(self, tokens: Dict[int, int]) -> List[Request]:
         """Append generated tokens; grow mappings; retire finished."""
@@ -102,7 +120,7 @@ class BatchScheduler:
             old_pages = len(self.kvm.pages[sid])
             self.kvm.append_token(sid)
             if len(self.kvm.pages[sid]) != old_pages:
-                self.versions[sid] += 1       # mapping changed
+                self.tcache.bump(sid)         # mapping changed
         for sid in list(self.running):
             if self.running[sid].done:
                 req = self.running.pop(sid)
@@ -110,6 +128,8 @@ class BatchScheduler:
                 self.free_slots.append(slot)
                 self.kvm.free_sequence(sid)
                 self.tcache.invalidate(sid)
+                if self.meter is not None:
+                    self.meter.retire_request(sid)
                 self.stats["completed"] += 1
                 finished.append(req)
         return finished

@@ -7,6 +7,8 @@ address-translation mechanisms (``repro.sim.mechanisms``) evaluated
 simultaneously along a leading "mechanism" axis — the paper's five
 (radix / ECH / huge page / NDPage / ideal) by default.
 """
+from repro.sim.cost_model import (LookupCost, TranslationCostModel,  # noqa: F401
+                                  TranslationMeter)
 from repro.sim.mechanisms import (DEFAULT_MECHS, MechanismSpec,  # noqa: F401
                                   register)
 from repro.sim.simulator import (MachineShape, SimJob,  # noqa: F401

@@ -56,6 +56,12 @@ class MechanismSpec:
     #: 2MB mappings: scaled TLB keys, 4KB-fallback fragmentation model and
     #: amortized promotion/fault stall
     huge: bool = False
+    #: the walk's bottom reads ONE flattened (merged) node — NDPage's
+    #: design point.  Consumed by the serving cost model: flattened
+    #: mechanisms price table rebuilds with the contiguous flat-row
+    #: line counts (adjacent leaves share cache lines), tree mechanisms
+    #: with per-node counts.
+    flattened: bool = False
     #: translation is free (no TLB, no walk) — the paper's upper bound
     ideal: bool = False
     #: VPN -> (T, n_pte) PTE line ids; None only when n_pte == 0
@@ -166,7 +172,7 @@ register(MechanismSpec(
                 "stalls grow with allocating cores"))
 
 register(MechanismSpec(
-    name="ndpage", n_pte=3, bypass_l1=True,
+    name="ndpage", n_pte=3, bypass_l1=True, flattened=True,
     pwc_levels=(True, True, False, False),
     walk_fn=PT.ndpage_walk_lines,
     description="NDPage: flattened L2/L1 node (one access), PTE accesses "
@@ -181,7 +187,7 @@ register(MechanismSpec(
 # Trades enormous per-node footprint for the shortest possible non-ideal
 # walk; kept OUT of DEFAULT_MECHS so the paper-figure runs are unchanged.
 register(MechanismSpec(
-    name="ndpage_pl3", n_pte=2, bypass_l1=True,
+    name="ndpage_pl3", n_pte=2, bypass_l1=True, flattened=True,
     pwc_levels=(True, False, False, False),
     walk_fn=PT.ndpage_pl3_walk_lines,
     description="flattened-PL3 NDPage variant: L4 + one merged L3/L2/L1 "
@@ -192,7 +198,7 @@ register(MechanismSpec(
 # Shares ndpage's walk function, so the sweep engine runs both in ONE
 # shape bucket — the bypass flag is per-lane data, not a new compile.
 register(MechanismSpec(
-    name="ndpage_nobyp", n_pte=3, bypass_l1=False,
+    name="ndpage_nobyp", n_pte=3, bypass_l1=False, flattened=True,
     pwc_levels=(True, True, False, False),
     walk_fn=PT.ndpage_walk_lines,
     description="NDPage with L1 bypass DISABLED (sensitivity ablation): "

@@ -1,0 +1,301 @@
+"""Translation cost model + costed serving path.
+
+Covers the PR-5 acceptance list: pinned-vs-swept equivalence on one
+point, costed translate bit-exactness, tokens/sec ordering stability
+across seeds, BENCH_sim.json "serving" merge safety, the trace-cache
+memo round-trip, and the TranslationCache version-semantics fixes.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import block_table as BT
+from repro.core.translation_cache import TranslationCache
+from repro.sim.cost_model import (ORG_FLAT, ORG_NONE, ORG_RADIX,
+                                  PINNED_COSTS, TranslationCostModel,
+                                  TranslationMeter, serving_org)
+
+
+# ---------------------------------------------------------------------------
+# cost model derivation
+# ---------------------------------------------------------------------------
+class TestCostModel:
+    def test_pinned_table_loads(self):
+        m = TranslationCostModel.pinned()
+        assert m.source == "pinned"
+        assert m.mechs == tuple(PINNED_COSTS["mechs"])
+        assert m.cost("ideal").walk == 0.0
+        assert m.cost("ndpage").org == ORG_FLAT
+        assert m.cost("radix").org == ORG_RADIX
+
+    def test_pinned_matches_swept_on_the_serving_point(self):
+        """The committed table IS a sweep product: re-deriving it from a
+        fresh simulator run on the SERVING_COST point must agree (the
+        same 5%-band the smoke-figure pins use)."""
+        from repro.configs.ndp_sim import SERVING_COST, ndp_machine
+        mach = ndp_machine(int(SERVING_COST["cores"]))
+        swept = TranslationCostModel.from_sim(mach, use_cache=False)
+        pinned = TranslationCostModel.pinned()
+        assert swept.mechs == pinned.mechs
+        for m in swept.mechs:
+            s, p = swept.cost(m), pinned.cost(m)
+            assert s.org == p.org, m
+            np.testing.assert_allclose(
+                [s.tlb_hit, s.walk, s.pte_line],
+                [p.tlb_hit, p.walk, p.pte_line], rtol=0.05, atol=1e-9,
+                err_msg=f"pinned cost table drifted for {m!r} — "
+                        "regenerate with `python -m repro.sim.cost_model`")
+
+    def test_memo_roundtrip(self, tmp_path, monkeypatch):
+        """Deriving writes a .trace_cache memo; the second call serves
+        it (source='cache') with identical numbers."""
+        monkeypatch.setenv("SIM_TRACE_CACHE", str(tmp_path))
+        from repro.configs.ndp_sim import ndp_machine
+        mach = ndp_machine(2)
+        a = TranslationCostModel.from_sim(mach)
+        assert a.source == "sweep"
+        memos = [f for f in os.listdir(tmp_path)
+                 if f.startswith("costmodel_")]
+        assert len(memos) == 1
+        b = TranslationCostModel.from_sim(mach)
+        assert b.source == "cache"
+        assert b.costs == a.costs and b.mechs == a.mechs
+
+    def test_walk_ordering_is_paper_consistent(self):
+        """The committed costs encode the paper's latency story: ndpage
+        walks are cheaper than radix walks, ideal is free."""
+        m = TranslationCostModel.pinned()
+        assert m.cost("ndpage").walk < m.cost("radix").walk
+        assert m.cost("ideal").walk == 0.0
+
+    def test_serving_org_covers_registry(self):
+        from repro.sim.mechanisms import registered_names
+        for name in registered_names():
+            assert serving_org(name) in (ORG_FLAT, ORG_RADIX, ORG_NONE)
+        assert serving_org("ndpage_pl3") == ORG_FLAT
+        assert serving_org("ech") == ORG_RADIX
+
+    def test_lookup_cycles_shape_and_hit_cost(self):
+        m = TranslationCostModel.pinned()
+        out = m.lookup_cycles(np.array([True, False]),
+                              np.array([1, 2]), np.array([2, 4]))
+        assert out.shape == (2, len(m.mechs))
+        i = m.mechs.index("radix")
+        assert out[0, i] == m.cost("radix").tlb_hit
+        want = m.cost("radix").walk + 3 * m.cost("radix").pte_line
+        assert out[1, i] == pytest.approx(want)
+        # flat mechanisms price the FLAT line count
+        j = m.mechs.index("ndpage")
+        want = m.cost("ndpage").walk + 1 * m.cost("ndpage").pte_line
+        assert out[1, j] == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# costed block-table variants
+# ---------------------------------------------------------------------------
+def _flat_rows(seed=0, b=4, maxp=32):
+    rng = np.random.default_rng(seed)
+    flat = np.full((b, maxp), -1, np.int32)
+    for i in range(b):
+        n = rng.integers(1, maxp + 1)
+        flat[i, :n] = rng.permutation(b * maxp)[:n]
+    return jnp.asarray(flat)
+
+
+class TestCostedTranslate:
+    def test_costed_translations_bit_exact(self):
+        flat = _flat_rows(seed=11)
+        radix = BT.radix_from_flat(flat, leaf_size=8)
+        for mode, tab in ((BT.FLAT, flat), (BT.RADIX, radix)):
+            plain = BT.translate_all(tab, mode)
+            costed, lines = BT.translate_all_costed(tab, mode)
+            assert (np.asarray(costed) == np.asarray(plain)).all()
+            assert np.asarray(lines).shape == (flat.shape[0],)
+        seq = jnp.asarray([0, 1, 2, 3])
+        page = jnp.asarray([0, 3, 7, 1])
+        for mode, tab in ((BT.FLAT, flat), (BT.RADIX, radix)):
+            plain = BT.translate_one(tab, seq, page, mode)
+            costed, _ = BT.translate_one_costed(tab, seq, page, mode)
+            assert (np.asarray(costed) == np.asarray(plain)).all()
+
+    def test_flat_leaves_share_lines_radix_does_not(self):
+        """A dense 20-page row spans 2 flat lines (contiguous span) but
+        1 directory + 3 leaf lines under radix (each leaf table is its
+        own line-aligned node) — Observation B's locality win."""
+        flat = np.full((1, 32), -1, np.int32)
+        flat[0, :20] = np.arange(20)
+        ft = jnp.asarray(flat)
+        _, lf = BT.translate_all_costed(ft, BT.FLAT)
+        _, lr = BT.translate_all_costed(
+            BT.radix_from_flat(ft, leaf_size=8), BT.RADIX)
+        assert int(lf[0]) == 2
+        assert int(lr[0]) == 1 + 3
+        # and generally: flat never touches MORE lines than radix
+        rows = _flat_rows(seed=3)
+        _, alf = BT.translate_all_costed(rows, BT.FLAT)
+        _, alr = BT.translate_all_costed(
+            BT.radix_from_flat(rows, leaf_size=8), BT.RADIX)
+        assert (np.asarray(alf) <= np.asarray(alr)).all()
+
+    def test_shared_leaf_counted_once(self):
+        """A leaf table referenced by two directory entries of one
+        sequence (prefix sharing) contributes its lines ONCE."""
+        leaves = jnp.asarray(
+            np.arange(16, dtype=np.int32).reshape(2, 8))
+        shared = BT.RadixTable(
+            directory=jnp.asarray([[0, 0, 1, -1]], jnp.int32),
+            leaves=leaves)
+        unique = BT.RadixTable(
+            directory=jnp.asarray([[0, 1, -1, -1]], jnp.int32),
+            leaves=leaves)
+        n_shared = int(BT.count_pte_lines(shared, BT.RADIX)[0])
+        n_unique = int(BT.count_pte_lines(unique, BT.RADIX)[0])
+        assert n_shared == n_unique == 1 + 2   # dir line + 2 leaf lines
+
+    def test_translate_one_line_counts(self):
+        flat = _flat_rows(seed=5)
+        radix = BT.radix_from_flat(flat, leaf_size=8)
+        seq = jnp.asarray([0, 1])
+        page = jnp.asarray([0, 9])
+        _, lf = BT.translate_one_costed(flat, seq, page, BT.FLAT)
+        _, lr = BT.translate_one_costed(radix, seq, page, BT.RADIX)
+        assert (np.asarray(lf) == 1).all()
+        assert (np.asarray(lr) == 2).all()   # dir line + mapped leaf
+
+
+# ---------------------------------------------------------------------------
+# TranslationCache version semantics (PR-5 satellite)
+# ---------------------------------------------------------------------------
+class TestTranslationCacheVersions:
+    def test_hit_rate_zero_on_fresh_cache(self):
+        assert TranslationCache().hit_rate == 0.0
+
+    def test_invalidate_bumps_version(self):
+        c = TranslationCache()
+        c.insert("s", None, np.arange(4))
+        assert c.lookup("s") is not None
+        c.invalidate("s")
+        assert c.version("s") == 1
+        # a reused seq id starting over can never see the stale row
+        assert c.lookup("s") is None
+
+    def test_stale_row_unreachable_after_bump(self):
+        c = TranslationCache()
+        c.insert("s", None, np.zeros(2))
+        c.bump("s")
+        assert c.lookup("s") is None          # version moved on
+        c.insert("s", None, np.ones(2))
+        row = c.lookup("s")
+        assert row is not None and (row == 1).all()
+
+    def test_version_dict_bounded_by_live_set(self):
+        """A stream of unique retired seq_ids never grows the version
+        dict — invalidate() drops the entry and raises the shared
+        floor instead (the long-lived-engine leak regression)."""
+        c = TranslationCache(capacity=8)
+        for i in range(100):
+            c.insert(i, None, np.zeros(1))
+            c.bump(i)
+            c.invalidate(i)
+        assert len(c._versions) == 0
+        assert c.version("fresh") >= 100   # floor moved past all of them
+
+    def test_floor_raise_does_not_orphan_live_rows(self):
+        """Another sequence retiring must not invalidate a live
+        sequence's cached rows (versions are pinned at insert)."""
+        c = TranslationCache()
+        c.insert("live", None, np.arange(2))
+        c.insert("dying", None, np.arange(2))
+        c.invalidate("dying")
+        assert c.lookup("live") is not None
+
+    def test_explicit_version_keys_still_work(self):
+        c = TranslationCache()
+        c.insert("s", 7, np.arange(3))
+        assert c.lookup("s", 7) is not None
+        assert c.lookup("s", 6) is None
+
+
+# ---------------------------------------------------------------------------
+# the costed serving path end-to-end
+# ---------------------------------------------------------------------------
+class TestCostedServing:
+    @pytest.fixture(scope="class")
+    def serving_runs(self):
+        """The smoke benchmark under two seeds, pinned cost table."""
+        from benchmarks.serving_translation import run_serving
+        return {seed: run_serving(fast=True, pinned=True, seed=seed)[1]
+                for seed in (0, 1)}
+
+    def test_ordering_stable_across_seeds(self, serving_runs):
+        for seed, summary in serving_runs.items():
+            for mix, s in summary["mixes"].items():
+                tps = s["tokens_per_sec"]
+                assert tps["ndpage"] >= tps["radix"], (seed, mix)
+                assert all(tps["ideal"] >= v - 1e-9
+                           for v in tps.values()), (seed, mix)
+                assert all(s["checks"].values()), (seed, mix)
+
+    def test_both_mixes_present(self, serving_runs):
+        for summary in serving_runs.values():
+            assert set(summary["mixes"]) == {"decode_heavy",
+                                             "prefill_heavy"}
+
+    def test_serving_merge_never_clobbers(self, tmp_path, serving_runs):
+        from benchmarks.serving_translation import merge_into_bench_json
+        path = tmp_path / "BENCH_sim.json"
+        other = {"figures_wall_s": 1.0, "sweeps": {"pwc_size": {}},
+                 "real_traces": {"pairs": {}}}
+        path.write_text(json.dumps(other))
+        merge_into_bench_json(serving_runs[0], str(path))
+        data = json.loads(path.read_text())
+        for k, v in other.items():
+            assert data[k] == v, k
+        assert data["serving"]["mixes"]
+        # merging twice just replaces the serving section
+        merge_into_bench_json(serving_runs[1], str(path))
+        data2 = json.loads(path.read_text())
+        assert data2["sweeps"] == other["sweeps"]
+        assert data2["serving"]["seed"] == 1
+
+    def test_per_request_budget_sums_to_total(self):
+        """The per-request budgets (live + retired) partition the
+        meter's total, and retiring keeps the live dict bounded."""
+        model = TranslationCostModel.pinned()
+        meter = TranslationMeter(model)
+        rows = np.asarray(_flat_rows(seed=2, b=3, maxp=16))
+        meter.record_step(["a", "b", "c"],
+                          np.array([True, False, True]), rows, 16)
+        meter.record_step(["a", "b"],
+                          np.array([False, True]), rows[:2], 16)
+        meter.retire_request("c")
+        assert "c" not in meter.per_request
+        total = sum(meter.request_budgets().values())
+        np.testing.assert_allclose(total, meter.total)
+        assert meter.tokens == 5 and meter.steps == 2
+        assert meter.hits == 3 and meter.misses == 2
+        assert len(meter.step_cycles) == 2
+        per_step = meter.per_step_cycles()
+        for i, m in enumerate(meter.model.mechs):
+            assert per_step[m]["max"] >= per_step[m]["mean"] >= 0.0
+            # mean over steps x steps == accumulated total
+            assert per_step[m]["mean"] * meter.steps == pytest.approx(
+                meter.total[i])
+
+    def test_numpy_fast_path_matches_block_table_helpers(self):
+        """The meter's per-step numpy line counting is pinned against
+        the canonical jnp helpers (count_pte_lines on the flat table
+        and on radix_from_flat)."""
+        from repro.sim.cost_model import _np_row_lines
+        for seed, ls in ((0, 8), (1, 16), (2, 4)):
+            flat = np.asarray(_flat_rows(seed=seed, b=5, maxp=32))
+            lf, lr = _np_row_lines(flat, ls)
+            want_lf = np.asarray(BT.count_pte_lines(
+                jnp.asarray(flat), BT.FLAT))
+            want_lr = np.asarray(BT.count_pte_lines(
+                BT.radix_from_flat(jnp.asarray(flat), ls), BT.RADIX))
+            np.testing.assert_array_equal(lf, want_lf)
+            np.testing.assert_array_equal(lr, want_lr)
