@@ -15,6 +15,9 @@ Sections (stages):
                 (benchmarks/trace_validate.py)
   * --serving:  translation-costed serving throughput per mechanism
                 (benchmarks/serving_translation.py)
+  * --search:   seeded design-space search + frontier-regression gate
+                (benchmarks/sim_search.py); ``--search-space`` selects
+                the space (default: the nightly ``default`` space)
 
 ``--fast`` (or SIM_FIGS_FAST=1) runs the simulator figures on the smoke
 preset — same engine and orderings, CI wall-clock.  ``--sim-only`` skips
@@ -22,8 +25,10 @@ the kernel microbenches.
 
 Every requested stage runs even if an earlier one fails, but ANY stage
 failure (an exception, or a failed ordering/validation check) makes the
-driver exit non-zero with a per-stage summary — a broken stage can
-never hide in the middle of a green nightly log.
+driver exit non-zero.  The end-of-run summary lists EVERY stage —
+passed or failed — with its wall time and exit detail (the exception
+message for failures), so a broken stage can never hide in the middle
+of a green nightly log and slow stages are visible at a glance.
 """
 from __future__ import annotations
 
@@ -90,6 +95,12 @@ def main(argv=None) -> None:
     p.add_argument("--serving", action="store_true",
                    help="also run the translation-costed serving "
                         "benchmark (benchmarks/serving_translation.py)")
+    p.add_argument("--search", action="store_true",
+                   help="also run the seeded design-space search and "
+                        "frontier-regression gate "
+                        "(benchmarks/sim_search.py)")
+    p.add_argument("--search-space", default="default",
+                   help="SEARCH_SPACES name for --search")
     args = p.parse_args(argv)
     if args.fast:
         os.environ["SIM_FIGS_FAST"] = "1"
@@ -102,16 +113,22 @@ def main(argv=None) -> None:
 
     # each stage runs isolated: a raising stage is RECORDED (and the
     # driver exits non-zero at the end) but never silently aborts the
-    # stages after it — nightly logs show every failure, masked by none
-    failures: list = []
+    # stages after it — nightly logs show every failure, masked by none.
+    # Every stage's outcome, wall time and exit detail land in the
+    # end-of-run summary, pass or fail.
+    stage_reports: list = []    # (name, ok, wall_s, detail)
 
     def stage(name, fn):
+        t0 = time.time()
         try:
             fn()
-        except Exception:
+        except Exception as e:
             traceback.print_exc()
-            failures.append(name)
-            print(f"# STAGE FAILED: {name}", file=sys.stderr)
+            detail = f"{type(e).__name__}: {e}"
+            stage_reports.append((name, False, time.time() - t0, detail))
+            print(f"# STAGE FAILED: {name} ({detail})", file=sys.stderr)
+        else:
+            stage_reports.append((name, True, time.time() - t0, "ok"))
 
     rows: list = []
     summary: dict = {}
@@ -194,6 +211,15 @@ def main(argv=None) -> None:
         if failed:
             raise RuntimeError(f"serving ordering checks FAILED: {failed}")
 
+    def st_search():
+        from benchmarks import sim_search
+        srows, ssummary = sim_search.run_search(args.search_space)
+        _print_rows(srows)
+        sim_search.merge_into_bench_json(ssummary, bench_sim_path)
+        failed = sim_search.failed_checks(ssummary)
+        if failed:
+            raise RuntimeError(f"search gates FAILED: {failed}")
+
     stage("figures", st_figures)
     if not args.sim_only:
         stage("kernels", st_kernels)
@@ -203,9 +229,19 @@ def main(argv=None) -> None:
         stage("trace_validate", st_trace_validate)
     if args.serving:
         stage("serving", st_serving)
+    if args.search:
+        stage("search", st_search)
 
+    # the per-stage summary: every stage, pass or fail, with wall time
+    # and exit detail — failures quote the exception, successes say ok
+    print("# stage summary:")
+    for name, ok, wall, detail in stage_reports:
+        print(f"#   {'PASS' if ok else 'FAIL'} {name:<16} "
+              f"{wall:7.1f}s  {detail}")
+    failures = [(n, d) for n, ok, _, d in stage_reports if not ok]
     if failures:
-        sys.exit(f"benchmark stages FAILED: {failures}")
+        sys.exit("benchmark stages FAILED: "
+                 + "; ".join(f"{n} ({d})" for n, d in failures))
 
 
 if __name__ == "__main__":

@@ -198,6 +198,61 @@ SWEEPS: Dict[str, dict] = {
 
 
 # ---------------------------------------------------------------------------
+# design-space-search presets (consumed by repro.sim.search.search(name))
+# ---------------------------------------------------------------------------
+#: the two committed real-format fixture traces, as "trace:" workload
+#: specs (paths relative to the repo root; the search layer absolutizes
+#: them) — the search objective averages over the figure-suite workload
+#: subset PLUS these, so a config that only wins on synthetics can't
+#: climb the frontier
+SEARCH_FIXTURES: Tuple[str, ...] = (
+    "trace:tests/fixtures/traces/gups_small.champsim.xz",
+    "trace:tests/fixtures/traces/graph_small.lackey.gz",
+)
+
+#: Declarative design spaces for the automated search.  Each entry is
+#: plain data consumed by ``repro.sim.search``: ``knobs`` is an ordered
+#: (name, values) tuple — ``flatten``/``l1_bypass``/``huge`` select the
+#: candidate's mechanism STRUCTURE from the registry family,
+#: ``l1_dtlb`` is an (entries, ways) geometry bundle, everything else a
+#: MachineConfig override path — plus the population sizing, the
+#: workload suite the fitness averages over, and the pinned seed that
+#: makes CI runs hermetic.  Geometry knobs change compiled shapes (one
+#: compile per distinct shape x flatten level, amortized by the runner
+#: cache and ``.jax_cache``); flag knobs ride the batch lanes as data.
+SEARCH_SPACES: Dict[str, dict] = {
+    # the standard seeded search: 4x3x2 machine geometries x 2 PWC
+    # latencies x 8 mechanism structures = 384 genomes; >= 200
+    # evaluated across <= 10 generations (1 paper + 56 random +
+    # 6 x 24 offspring = 201).  pwc_latency is a VALUE-ONLY knob —
+    # it rides the batch lanes and adds no compile buckets
+    "default": dict(
+        knobs=(("pwc_entries", (8, 16, 32, 64)),
+               ("pwc_latency", (2, 4)),
+               ("l1_dtlb", ((64, 4), (128, 8), (256, 8))),
+               ("l2_tlb.entries", (1536, 3072)),
+               ("flatten", ("pl2", "pl3")),
+               ("l1_bypass", (True, False)),
+               ("huge", (False, True))),
+        cores=4,
+        workloads=SWEEP_WORKLOADS + SEARCH_FIXTURES,
+        n_random=56, population=32, generations=6, offspring=24,
+        trace_len=512, chunk=512, preset="smoke", seed=20250808),
+    # PR fast lane: 1 generation over a 2-shape slice, sub-minute even
+    # with cold compile caches
+    "quick": dict(
+        knobs=(("pwc_entries", (16, 32)),
+               ("flatten", ("pl2", "pl3")),
+               ("l1_bypass", (True, False)),
+               ("huge", (False, True))),
+        cores=4,
+        workloads=("rnd", "bc", "xs") + SEARCH_FIXTURES[:1],
+        n_random=10, population=8, generations=1, offspring=6,
+        trace_len=512, chunk=512, preset="smoke", seed=7),
+}
+
+
+# ---------------------------------------------------------------------------
 # translation-costed serving preset (consumed by repro.sim.cost_model and
 # benchmarks/serving_translation.py)
 # ---------------------------------------------------------------------------

@@ -15,4 +15,10 @@ from repro.sim.simulator import (MachineShape, SimJob,  # noqa: F401
                                  SimResult, machine_shape,
                                  runner_cache_info, simulate,
                                  simulate_batch, simulate_batch_varied)
-from repro.sim.sweep import SweepResult, sweep  # noqa: F401
+from repro.sim.sweep import SweepResult, run_bucketed, sweep  # noqa: F401
+
+# NOTE: the design-space search layer (repro.sim.search) is deliberately
+# NOT re-exported here: it is also a ``python -m repro.sim.search`` CLI,
+# and importing it from the package __init__ would make every CLI run
+# warn about the module pre-existing in sys.modules.  Import it as
+# ``from repro.sim.search import search, SearchSpace``.

@@ -208,6 +208,63 @@ class SweepResult:
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
+def run_bucketed(jobs: Sequence[SimJob], *, chunk: int,
+                 devices: int | None = None,
+                 length: int | None = None
+                 ) -> Tuple[List[SimResult], Dict]:
+    """The sweep engine's dispatch core, reusable on any heterogeneous
+    job list (the design-space search feeds whole candidate populations
+    through here): bucket ``jobs`` by compiled shape — ``machine_shape``
+    x the mechanisms' walk-fn tuple — and run each bucket as ONE
+    :func:`simulate_batch_varied` dispatch.  Value-only differences
+    (latencies, bypass/PWC/huge flags, walk depth) ride the batch lanes,
+    so compile count is bounded by the number of buckets, never the
+    number of jobs.
+
+    Returns the per-job :class:`SimResult` list (job order preserved)
+    plus the bucketing/compile stats dict ``sweep()`` exposes as
+    ``SweepResult.stats`` (minus the grid-level entries)."""
+    buckets: "OrderedDict[Tuple, List[int]]" = OrderedDict()
+    for i, j in enumerate(jobs):
+        key = (machine_shape(j.mach), _walk_fns(j.mechs))
+        buckets.setdefault(key, []).append(i)
+
+    results: List[SimResult] = [None] * len(jobs)   # type: ignore[list-item]
+    info0 = runner_cache_info()
+    per_bucket = []
+    t0 = time.perf_counter()
+    for (shape, wf), idxs in buckets.items():
+        before = runner_cache_info().misses
+        tm: Dict = {}
+        outs = simulate_batch_varied([jobs[i] for i in idxs], length,
+                                     chunk=chunk, devices=devices,
+                                     timings=tm)
+        for i, res in zip(idxs, outs):
+            results[i] = res
+        per_bucket.append({
+            "shape": f"{shape.num_cores}c/" + ",".join(
+                f"{n}:{s}x{w}" for n, s, w in shape.tables),
+            "walk_fns": [getattr(f, "__qualname__", str(f)) if f else None
+                         for f in wf],
+            "points": list(idxs),
+            "lanes": len(idxs),
+            "compiles": runner_cache_info().misses - before,
+            "total_s": round(tm.get("total_s", 0.0), 3),
+            "compile_s_est": round(tm.get("compile_s_est", 0.0), 3),
+        })
+    return results, {
+        "points": len(jobs),
+        "buckets": len(buckets),
+        # buckets may split one machine shape across walk-fn tuples, so
+        # count the shapes themselves for the compile accounting
+        "distinct_shapes": len({shape for shape, _ in buckets}),
+        "runner_compiles": runner_cache_info().misses - info0.misses,
+        "wall_s": round(time.perf_counter() - t0, 3),
+        "chunk": chunk,
+        "per_bucket": per_bucket,
+    }
+
+
 GridLike = Union[str, Mapping[str, Sequence], "OrderedDict[str, Tuple]"]
 
 
@@ -278,56 +335,22 @@ def sweep(grid: GridLike, *, base: str | None = None,
             dict(zip(axes, combo)), kw["base"], kw["cores"],
             kw["workload"], kw["mechs"]))
 
-    # bucket the cross-product by compiled shape: machine_shape x the
-    # mechanisms' walk-fn tuple.  Same shape -> same bucket, always —
-    # value-only differences (latencies, flags) ride the lanes.
-    buckets: "OrderedDict[Tuple, List[int]]" = OrderedDict()
-    for i, p in enumerate(points):
-        key = (machine_shape(p.mach), _walk_fns(p.mechs))
-        buckets.setdefault(key, []).append(i)
-
+    # resolve each point's trace once per (workload, cores), then hand
+    # the whole cross-product to the bucketed dispatch core: one
+    # simulate_batch_varied call per (machine shape, walk-fn) bucket,
+    # value-only differences riding the lanes
     from repro.workloads import generate_trace
-    results = np.empty(dims, object)
-    info0 = runner_cache_info()
-    per_bucket = []
     traces: Dict[Tuple[str, int], Dict] = {}   # (workload, cores) -> trace
-    t0 = time.perf_counter()
-    for (shape, _wf), idxs in buckets.items():
-        for i in idxs:
-            key = (points[i].workload, shape.num_cores)
-            if key not in traces:
-                traces[key] = generate_trace(key[0], key[1],
-                                             length=trace_len, seed=seed,
-                                             preset=sim_preset)
-        jobs = [SimJob(points[i].mach,
-                       traces[points[i].workload, shape.num_cores],
-                       points[i].mechs) for i in idxs]
-        before = runner_cache_info().misses
-        tm: Dict = {}
-        outs = simulate_batch_varied(jobs, chunk=chunk, devices=devices,
-                                     timings=tm)
-        for i, res in zip(idxs, outs):
-            results[np.unravel_index(i, dims)] = res
-        per_bucket.append({
-            "shape": f"{shape.num_cores}c/" + ",".join(
-                f"{n}:{s}x{w}" for n, s, w in shape.tables),
-            "points": list(idxs),
-            "lanes": len(idxs),
-            "compiles": runner_cache_info().misses - before,
-            "total_s": round(tm.get("total_s", 0.0), 3),
-            "compile_s_est": round(tm.get("compile_s_est", 0.0), 3),
-        })
-
-    stats = {
-        "points": len(points),
-        "buckets": len(buckets),
-        # buckets may split one machine shape across walk-fn tuples, so
-        # count the shapes themselves for the compile accounting
-        "distinct_shapes": len({shape for shape, _ in buckets}),
-        "runner_compiles": runner_cache_info().misses - info0.misses,
-        "wall_s": round(time.perf_counter() - t0, 3),
-        "trace_len": trace_len,
-        "chunk": chunk,
-        "per_bucket": per_bucket,
-    }
+    for p in points:
+        key = (p.workload, p.mach.num_cores)
+        if key not in traces:
+            traces[key] = generate_trace(key[0], key[1], length=trace_len,
+                                         seed=seed, preset=sim_preset)
+    jobs = [SimJob(p.mach, traces[p.workload, p.mach.num_cores], p.mechs)
+            for p in points]
+    outs, stats = run_bucketed(jobs, chunk=chunk, devices=devices)
+    results = np.empty(dims, object)
+    for i, res in enumerate(outs):
+        results[np.unravel_index(i, dims)] = res
+    stats["trace_len"] = trace_len
     return SweepResult(axes=axes, results=results, stats=stats)

@@ -140,3 +140,25 @@ def test_online_softmax_chunking_invariance(seed, chunks):
                               kv_chunk=chunks)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# design-space search: Pareto frontier law over arbitrary objectives
+# ---------------------------------------------------------------------------
+@SET
+@given(vals=st.lists(st.tuples(st.floats(0, 1, allow_nan=False),
+                               st.floats(0, 1, allow_nan=False),
+                               st.floats(0, 1, allow_nan=False)),
+                     min_size=1, max_size=25))
+def test_pareto_frontier_membership_iff_nondominated(vals):
+    """pareto_indices returns EXACTLY the non-dominated vectors: every
+    member is undominated, every non-member has a dominator."""
+    from repro.sim.search import OBJECTIVES, dominates, pareto_indices
+    names = [n for n, _ in OBJECTIVES]
+    vecs = [dict(zip(names, row)) for row in vals]
+    front = set(pareto_indices(vecs))
+    assert front
+    for i, v in enumerate(vecs):
+        dominated = any(dominates(w, v)
+                        for j, w in enumerate(vecs) if j != i)
+        assert (i in front) == (not dominated)
