@@ -101,6 +101,14 @@ def main(argv=None) -> None:
                         "(benchmarks/sim_search.py)")
     p.add_argument("--search-space", default="default",
                    help="SEARCH_SPACES name for --search")
+    p.add_argument("--stage-timeout", type=float,
+                   default=float(os.environ.get("BENCH_STAGE_TIMEOUT",
+                                                "0") or 0),
+                   help="wall-clock seconds per stage; a stage still "
+                        "running at the deadline is reported TIMEOUT "
+                        "(distinct from FAIL), later stages still run, "
+                        "and the driver exits non-zero (0 = no limit; "
+                        "env BENCH_STAGE_TIMEOUT)")
     args = p.parse_args(argv)
     if args.fast:
         os.environ["SIM_FIGS_FAST"] = "1"
@@ -115,20 +123,29 @@ def main(argv=None) -> None:
     # driver exits non-zero at the end) but never silently aborts the
     # stages after it — nightly logs show every failure, masked by none.
     # Every stage's outcome, wall time and exit detail land in the
-    # end-of-run summary, pass or fail.
-    stage_reports: list = []    # (name, ok, wall_s, detail)
+    # end-of-run summary: PASS, FAIL, or TIMEOUT (a stage that was
+    # still running at --stage-timeout; the hung thread is abandoned
+    # and the remaining stages run on the main thread as usual).
+    from repro.util import resilience
+    stage_reports: list = []    # (name, status, wall_s, detail)
 
     def stage(name, fn):
         t0 = time.time()
         try:
-            fn()
+            resilience.watchdog_call(fn, args.stage_timeout,
+                                     tag=f"stage:{name}", retries=0)
+        except resilience.DispatchTimeout as e:
+            detail = str(e)
+            stage_reports.append((name, "TIMEOUT", time.time() - t0,
+                                  detail))
+            print(f"# STAGE TIMEOUT: {name} ({detail})", file=sys.stderr)
         except Exception as e:
             traceback.print_exc()
             detail = f"{type(e).__name__}: {e}"
-            stage_reports.append((name, False, time.time() - t0, detail))
+            stage_reports.append((name, "FAIL", time.time() - t0, detail))
             print(f"# STAGE FAILED: {name} ({detail})", file=sys.stderr)
         else:
-            stage_reports.append((name, True, time.time() - t0, "ok"))
+            stage_reports.append((name, "PASS", time.time() - t0, "ok"))
 
     rows: list = []
     summary: dict = {}
@@ -232,16 +249,23 @@ def main(argv=None) -> None:
     if args.search:
         stage("search", st_search)
 
-    # the per-stage summary: every stage, pass or fail, with wall time
-    # and exit detail — failures quote the exception, successes say ok
+    # the per-stage summary: every stage with wall time and exit detail
+    # — failures quote the exception, timeouts the abandoned deadline,
+    # successes say ok.  Recovery events (quarantines, watchdog
+    # retries, preemptions) taken along the way are listed so a PASS
+    # that leaned on the resilience layer is visible as such.
     print("# stage summary:")
-    for name, ok, wall, detail in stage_reports:
-        print(f"#   {'PASS' if ok else 'FAIL'} {name:<16} "
-              f"{wall:7.1f}s  {detail}")
-    failures = [(n, d) for n, ok, _, d in stage_reports if not ok]
+    for name, status, wall, detail in stage_reports:
+        print(f"#   {status:<7} {name:<16} {wall:7.1f}s  {detail}")
+    events = resilience.recovery_events()
+    if events:
+        print("# recovery events:")
+        for kind, detail in events:
+            print(f"#   {kind}: {detail}")
+    failures = [(n, s, d) for n, s, _, d in stage_reports if s != "PASS"]
     if failures:
         sys.exit("benchmark stages FAILED: "
-                 + "; ".join(f"{n} ({d})" for n, d in failures))
+                 + "; ".join(f"{n} ({s}: {d})" for n, s, d in failures))
 
 
 if __name__ == "__main__":

@@ -83,11 +83,19 @@ class TranslationCache:
         concurrent insert for the same (seq_id, 0) key.  The id's
         tracking entry is dropped (the dict stays bounded by the live
         set) and the shared floor raised past every version it used —
-        a recycled id restarts above them."""
+        a recycled id restarts above them.
+
+        Invalidating an id that was never admitted (no cached rows, no
+        version entry) is a pure no-op: raising the floor for it would
+        desynchronize EVERY untracked id's version for no benefit —
+        retry/eviction paths may double-invalidate freely."""
+        had_rows = False
         for key in [k for k in self._store if k[0] == seq_id]:
             del self._store[key]
-        self._floor = max(self._floor, self.version(seq_id) + 1)
-        self._versions.pop(seq_id, None)
+            had_rows = True
+        if had_rows or seq_id in self._versions:
+            self._floor = max(self._floor, self.version(seq_id) + 1)
+            self._versions.pop(seq_id, None)
 
     @property
     def hit_rate(self) -> float:

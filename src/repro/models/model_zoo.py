@@ -114,16 +114,21 @@ def forward_train(params: Params, cfg: C.ArchConfig, batch: Dict[str, Any]):
 def init_decode_state(cfg: C.ArchConfig, batch: int, max_len: int,
                       kv_mode: str = "dense",
                       page_size: int = DEFAULT_PAGE_SIZE,
-                      table=None) -> Dict[str, Any]:
+                      table=None, num_pages: int | None = None
+                      ) -> Dict[str, Any]:
     """Concrete zero-initialized decode state.
 
     For paged modes the default table is the identity pre-mapped layout
     (page p of seq b -> physical b*max_pages+p); the serving engine replaces
-    it with KVPageManager-built tables.
+    it with KVPageManager-built tables.  ``num_pages`` sizes the physical
+    KV pools (default ``batch * max_pages``); callers with a host-side
+    page allocator MUST pass their pool size — a physical page id at or
+    past the pool silently corrupts KV through clamped scatter/gather.
     """
     max_pages = -(-max_len // page_size)
     padded_len = max_pages * page_size
-    pages_per_layer = batch * max_pages
+    pages_per_layer = (batch * max_pages if num_pages is None
+                       else num_pages)
     state: Dict[str, Any] = {
         "lengths": jnp.zeros((batch,), jnp.int32),
         "stack": T.stack_init_state(cfg, batch, padded_len, kv_mode,

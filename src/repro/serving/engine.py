@@ -31,6 +31,7 @@ from repro.core import block_table as BT
 from repro.core.kv_page_manager import KVPageManager
 from repro.models import decode_step, init_decode_state
 from repro.serving.scheduler import BatchScheduler, Request
+from repro.util import resilience
 
 
 class ServeEngine:
@@ -52,11 +53,18 @@ class ServeEngine:
                                     table_mode=table_mode,
                                     meter=self.meter)
         self.max_batch = max_batch
+        # the jit-side KV pools must cover every physical page id the
+        # host allocator can hand out (ids at/past the pool corrupt KV
+        # silently through clamped scatter)
         self.state = init_decode_state(cfg, max_batch, max_len,
-                                       kv_mode=BT.FLAT, page_size=page_size)
-        # per-slot prompt progress
+                                       kv_mode=BT.FLAT, page_size=page_size,
+                                       num_pages=max_pages_total)
+        # per-slot prompt progress; _slot_prompt holds the stream being
+        # teacher-forced (effective prompt snapshot taken at admission,
+        # so a preempted request re-prefills prompt + prior tokens)
         self._prompt_pos = np.zeros(max_batch, np.int64)
         self._next_token = np.zeros(max_batch, np.int32)
+        self._slot_prompt: List[Optional[np.ndarray]] = [None] * max_batch
         # inactive slots write their (discarded) K/V into a scratch page so
         # they can never alias a live sequence's pages
         self._scratch_page = self.kvm.pool.allocate(1)[0]
@@ -68,10 +76,15 @@ class ServeEngine:
     def run(self, max_steps: int = 10_000) -> List[Request]:
         finished: List[Request] = []
         for _ in range(max_steps):
+            self.sched.tick()
             for slot, req in self.sched.admit():
-                # admitted with mapping for 1 token; feed prompt from step 0
+                # pages for the whole effective prompt were mapped at
+                # admission; teacher-force it from step 0 (for a resumed
+                # request that replays prompt + generated-so-far, so the
+                # KV cache is rebuilt bit-exactly before decode resumes)
+                self._slot_prompt[slot] = req.effective_prompt()
                 self._prompt_pos[slot] = 0
-                self._next_token[slot] = int(req.prompt[0])
+                self._next_token[slot] = int(self._slot_prompt[slot][0])
             if not self.sched.running and not self.sched.queue:
                 break
             if not self.sched.running:
@@ -99,6 +112,14 @@ class ServeEngine:
 
     # -- internals --------------------------------------------------------------
     def _engine_step(self) -> List[Request]:
+        # injected mid-decode eviction (the evict_storm chaos plan):
+        # preempt the scheduler's victim of choice before the step runs;
+        # greedy re-prefill makes the final tokens bit-exact anyway
+        inj = resilience.fault_injector()
+        if inj is not None and self.sched.running and inj.fires("evict"):
+            self.sched.preempt(self.sched.pick_victim(), reason="fault")
+            if not self.sched.running:
+                return []
         mode, table, lens = self._build_tables()
         tokens = jnp.asarray(self._next_token)
         state = dict(self.state)
@@ -112,13 +133,12 @@ class ServeEngine:
         produced: Dict[int, int] = {}
         for sid in self.sched.active_seqs():
             slot = self.sched.slot_of[sid]
-            req = self.sched.running[sid]
             self._prompt_pos[slot] += 1
             pos = self._prompt_pos[slot]
-            if pos < len(req.prompt):
-                # teacher-forced prompt consumption (pages for the whole
-                # prompt were mapped at admission)
-                self._next_token[slot] = int(req.prompt[pos])
+            stream = self._slot_prompt[slot]
+            if pos < len(stream):
+                # teacher-forced prompt consumption
+                self._next_token[slot] = int(stream[pos])
             else:
                 nxt = int(np.argmax(logits[slot]))
                 self._next_token[slot] = nxt

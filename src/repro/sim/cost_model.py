@@ -50,7 +50,6 @@ import hashlib
 import json
 import os
 import sys
-import tempfile
 from collections import deque
 from typing import Dict, Hashable, Sequence, Tuple
 
@@ -59,6 +58,7 @@ import numpy as np
 from repro.configs.ndp_sim import (PRESETS, SERVING_COST, MachineConfig,
                                    cpu_machine, ndp_machine)
 from repro.sim import mechanisms as MS
+from repro.util import resilience
 
 #: part of the memo key: bump on any change to the derivation above
 _COST_MODEL_VERSION = 1
@@ -304,39 +304,34 @@ def _memo_path(mach: MachineConfig, mechs: Tuple[str, ...], preset: str,
 
 def _memo_load(path: str | None, mcpt: float
                ) -> "TranslationCostModel | None":
-    if path is None or not os.path.exists(path):
+    """Integrity-checked memo load (sha256 sidecar, quarantine on
+    corruption — see :mod:`repro.util.resilience`); None = re-derive."""
+    if path is None:
+        return None
+    p = resilience.read_json(path)
+    if p is None:
         return None
     try:
-        with open(path) as f:
-            p = json.load(f)
         return TranslationCostModel(
             mechs=tuple(p["mechs"]),
             costs=tuple(LookupCost(*p["costs"][m]) for m in p["mechs"]),
             machine=p["machine"], freq_ghz=p["freq_ghz"],
             model_cycles_per_token=mcpt, source="cache")
-    except Exception:                    # corrupt/stale memo: re-derive
+    except Exception:                    # schema drift: re-derive
+        resilience.quarantine(path, "costmodel memo schema mismatch")
         return None
 
 
 def _memo_store(path: str | None, model: TranslationCostModel) -> None:
     if path is None:
         return
-    tmp = None
-    try:
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump({
-                "mechs": list(model.mechs),
-                "costs": {m: list(dataclasses.astuple(c))
-                          for m, c in zip(model.mechs, model.costs)},
-                "machine": model.machine, "freq_ghz": model.freq_ghz,
-            }, f, indent=1)
-        os.replace(tmp, path)
-    except OSError:                      # read-only checkout: cache-off
-        if tmp is not None and os.path.exists(tmp):
-            os.unlink(tmp)
+    # atomic + sidecar; filesystem failure degrades to cache-off
+    resilience.write_json(path, {
+        "mechs": list(model.mechs),
+        "costs": {m: list(dataclasses.astuple(c))
+                  for m, c in zip(model.mechs, model.costs)},
+        "machine": model.machine, "freq_ghz": model.freq_ghz,
+    }, indent=1)
 
 
 # ---------------------------------------------------------------------------

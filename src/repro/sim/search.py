@@ -69,7 +69,6 @@ import hashlib
 import json
 import os
 import sys
-import tempfile
 import time
 from collections import OrderedDict
 from typing import Dict, List, Sequence, Tuple
@@ -81,6 +80,7 @@ from repro.configs.ndp_sim import (PRESETS, SEARCH_SPACES, MachineConfig,
 from repro.sim.mechanisms import MAX_PTE
 from repro.sim.simulator import SimJob, SimResult
 from repro.sim.sweep import apply_param, run_bucketed
+from repro.util import resilience
 
 #: part of the eval-cache key: bump on any change to the evaluation or
 #: objective derivation in this module
@@ -375,7 +375,9 @@ def _objectives_from_results(space: SearchSpace, genome: Tuple,
 
 def evaluate_genomes(space: SearchSpace, genomes: Sequence[Tuple], *,
                      cache: Dict | None = None,
-                     devices: int | None = None
+                     devices: int | None = None,
+                     checkpoint: "bool | str | None" = None,
+                     watchdog_s: float | None = None
                      ) -> Tuple[List[Tuple[Dict, Dict, str]], Dict]:
     """Evaluate a batch of genomes: each becomes ``len(workloads)``
     value-only lanes of the bucketed sweep dispatch (one
@@ -384,6 +386,9 @@ def evaluate_genomes(space: SearchSpace, genomes: Sequence[Tuple], *,
     Returns (per-genome ``(objectives, per_workload, mech)`` in input
     order, dispatch stats).  ``cache`` (genome-key -> stored eval) is
     consulted and updated in place; cached genomes never re-dispatch.
+    ``checkpoint``/``watchdog_s`` pass straight to
+    :func:`repro.sim.sweep.run_bucketed` (crash-resume + hung-dispatch
+    retry; both off by default).
     """
     cache = {} if cache is None else cache
     stats = {"points": 0, "buckets": 0, "runner_compiles": 0,
@@ -405,7 +410,9 @@ def evaluate_genomes(space: SearchSpace, genomes: Sequence[Tuple], *,
             jobs.extend(SimJob(mach, traces[wl], ("radix", mech))
                         for wl in space.workloads)
         outs, dstats = run_bucketed(jobs, chunk=space.chunk,
-                                    devices=devices)
+                                    devices=devices,
+                                    checkpoint=checkpoint,
+                                    watchdog_s=watchdog_s)
         for k in ("points", "buckets", "runner_compiles",
                   "distinct_shapes", "wall_s"):
             stats[k] = dstats[k]
@@ -477,30 +484,24 @@ def _eval_cache_path(space: SearchSpace) -> str | None:
 
 
 def _eval_cache_load(path: str | None) -> Dict:
-    if path is None or not os.path.exists(path):
+    """Integrity-checked eval-cache load (sha256 sidecar, quarantine on
+    corruption); a bad cache re-evaluates instead of crashing a resumed
+    search."""
+    if path is None:
         return {}
-    try:
-        with open(path) as f:
-            data = json.load(f)
-        return data if isinstance(data, dict) else {}
-    except Exception:                    # corrupt cache: re-evaluate
-        return {}
+    data = resilience.read_json(path)
+    if isinstance(data, dict):
+        return data
+    if data is not None:
+        resilience.quarantine(path, "eval cache is not a dict")
+    return {}
 
 
 def _eval_cache_store(path: str | None, cache: Dict) -> None:
     if path is None:
         return
-    tmp = None
-    try:
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(cache, f)
-        os.replace(tmp, path)
-    except OSError:                      # read-only checkout: cache-off
-        if tmp is not None and os.path.exists(tmp):
-            os.unlink(tmp)
+    # atomic + sidecar; filesystem failure degrades to cache-off
+    resilience.write_json(path, cache)
 
 
 # ---------------------------------------------------------------------------
@@ -569,12 +570,18 @@ def _breed(rng: np.random.Generator, space: SearchSpace,
 # ---------------------------------------------------------------------------
 def search(space: "SearchSpace | str" = "default", *,
            seed: int | None = None, use_cache: bool = True,
-           devices: int | None = None) -> SearchResult:
+           devices: int | None = None,
+           checkpoint: "bool | str | None" = None,
+           watchdog_s: float | None = None) -> SearchResult:
     """Run the seeded design-space search (see module docstring).
 
     Deterministic: the same ``seed`` (default: the space's pinned seed)
     over the same space and engine produces a bit-identical frontier,
-    with or without a warm eval cache.
+    with or without a warm eval cache.  A killed run resumes on two
+    levels: the persisted eval cache skips whole finished generations,
+    and ``checkpoint=True`` additionally restores any finished dispatch
+    buckets of the generation that was in flight (see
+    :func:`repro.sim.sweep.run_bucketed`).
     """
     space = resolve_space(space)
     seed = space.seed if seed is None else seed
@@ -594,7 +601,9 @@ def search(space: "SearchSpace | str" = "default", *,
     def submit(batch: List[Tuple[Tuple, str]], gen: int) -> None:
         genomes = [g for g, _ in batch]
         evals, stats = evaluate_genomes(space, genomes, cache=cache,
-                                        devices=devices)
+                                        devices=devices,
+                                        checkpoint=checkpoint,
+                                        watchdog_s=watchdog_s)
         totals["runner_compiles"] += stats["runner_compiles"]
         totals["dispatch_buckets"] += stats["buckets"]
         totals["eval_cache_hits"] += stats["cache_hits"]

@@ -299,12 +299,32 @@ def _walk_fns(names: Tuple[str, ...]) -> Tuple:
     return tuple(s.walk_fn for s in specs_for(names))
 
 
+#: misses accumulated before explicit clear_runner_cache() calls, so
+#: runner_cache_info().misses stays MONOTONE across watchdog recoveries
+#: (lru_cache.cache_clear resets its own counters)
+_CLEARED_MISSES = 0
+
+
 def runner_cache_info():
     """Cache stats of the compiled-runner cache: ``misses`` counts the
     runners built this process — one per distinct (machine shape,
-    walk-fn tuple, chunk, batched) combination.  The sweep engine and
-    its tests use this to assert "one compile per shape bucket"."""
-    return _chunk_runner.cache_info()
+    walk-fn tuple, chunk, batched) combination, monotone across
+    :func:`clear_runner_cache`.  The sweep engine and its tests use
+    this to assert "one compile per shape bucket"."""
+    info = _chunk_runner.cache_info()
+    return info._replace(misses=info.misses + _CLEARED_MISSES)
+
+
+def clear_runner_cache() -> None:
+    """Drop every cached compiled runner.  The watchdog's recovery
+    hook: after a hung/timed-out dispatch the wedged executable is the
+    prime suspect, so the retry rebuilds it from scratch (the
+    persistent .jax_cache still serves unaffected compilations).
+    Compile accounting survives: past misses fold into the monotone
+    counter :func:`runner_cache_info` reports."""
+    global _CLEARED_MISSES
+    _CLEARED_MISSES += _chunk_runner.cache_info().misses
+    _chunk_runner.cache_clear()
 
 
 def init_state(mach: MachineConfig, m: int = M, batch: int | None = None):

@@ -37,19 +37,24 @@ plain ndarray, and ``point(...)`` returns one ``SimResult``.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 import itertools
+import json
+import os
 import time
 from collections import OrderedDict
-from typing import Dict, List, Mapping, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.configs.ndp_sim import (PRESETS, SWEEPS, WORKLOADS,
                                    MachineConfig, cpu_machine, ndp_machine)
 from repro.sim.mechanisms import DEFAULT_MECHS, get as _get_mech
-from repro.sim.simulator import (SimJob, SimResult, machine_shape,
-                                 runner_cache_info, simulate_batch_varied,
-                                 _walk_fns)
+from repro.sim.simulator import (SimJob, SimResult, clear_runner_cache,
+                                 machine_shape, runner_cache_info,
+                                 simulate_batch_varied, _walk_fns)
+from repro.util import resilience
 
 #: axis names with dedicated semantics; everything else is a
 #: MachineConfig override path
@@ -208,9 +213,113 @@ class SweepResult:
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
+#: SimResult array fields, in (de)serialization order, for checkpoints
+_RESULT_FIELDS = ("cycles", "instructions", "trans_cycles", "walk_cycles",
+                  "walks", "l1tlb_misses", "pte_accesses", "pte_l1_hits",
+                  "pte_mem", "data_l1_misses", "data_mem")
+
+
+@functools.lru_cache(maxsize=1)
+def _engine_ckpt_digest() -> str:
+    """Hash of every source the checkpointed results depend on besides
+    the jobs themselves — a code change can never serve stale bucket
+    results."""
+    import repro.core.page_table as _pt
+    import repro.sim.mechanisms as _mech
+    import repro.sim.simulator as _sim
+    import repro.workloads.generators as _gen
+    from repro.configs import ndp_sim as _cfg
+    h = hashlib.sha256()
+    for mod in (_sim, _mech, _gen, _pt, _cfg):
+        with open(mod.__file__, "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def checkpoint_key(jobs: Sequence[SimJob], chunk: int,
+                   length: int | None) -> str:
+    """Content key of one ``run_bucketed`` call: engine sources, chunk
+    layout, and every job's machine, mechanisms and trace BYTES (str
+    trace specs hash the underlying file) — the same staleness
+    discipline as the trace cache."""
+    h = hashlib.sha256()
+    h.update(_engine_ckpt_digest().encode())
+    h.update(json.dumps({"chunk": chunk, "length": length}).encode())
+    memo: Dict[int, str] = {}
+    for j in jobs:
+        h.update(json.dumps(dataclasses.asdict(j.mach), sort_keys=True,
+                            default=str).encode())
+        h.update(repr(tuple(j.mechs)).encode())
+        t = j.trace
+        if isinstance(t, str):
+            h.update(t.encode())
+            if t.startswith("trace:"):
+                from repro.workloads.ingest import (file_sha256,
+                                                    parse_trace_spec)
+                h.update(file_sha256(parse_trace_spec(t)[0]).encode())
+        else:
+            tid = id(t)
+            if tid not in memo:
+                th = hashlib.sha256()
+                for k in ("vpn", "off", "work"):
+                    th.update(np.ascontiguousarray(t[k]).tobytes())
+                th.update(str(int(t["pages"])).encode())
+                memo[tid] = th.hexdigest()
+            h.update(memo[tid].encode())
+    return h.hexdigest()[:20]
+
+
+def _ckpt_pack(results: Sequence[SimResult]) -> Dict:
+    out: Dict = {"n": np.int64(len(results))}
+    for k, r in enumerate(results):
+        out[f"j{k}_mechs"] = np.asarray(r.mechs)
+        out[f"j{k}_accesses"] = np.int64(r.accesses)
+        for f in _RESULT_FIELDS:
+            out[f"j{k}_{f}"] = getattr(r, f)
+    return out
+
+
+def _ckpt_unpack(arrays: Dict, expect: int) -> Optional[List[SimResult]]:
+    try:
+        if int(arrays["n"]) != expect:
+            return None
+        return [SimResult(
+            mechs=tuple(str(m) for m in arrays[f"j{k}_mechs"]),
+            accesses=int(arrays[f"j{k}_accesses"]),
+            **{f: arrays[f"j{k}_{f}"] for f in _RESULT_FIELDS})
+            for k in range(expect)]
+    except KeyError:                     # schema drift: re-dispatch
+        return None
+
+
+def _resolve_checkpoint(checkpoint, jobs, chunk, length
+                        ) -> Optional[str]:
+    """The checkpoint path prefix for this call, or None (off).
+
+    ``checkpoint``: None consults ``SIM_SWEEP_CHECKPOINT`` (unset/0 =
+    off, any other value = on); True/"auto" derive the content key;
+    any other string IS the key (caller-managed staleness)."""
+    if checkpoint is None:
+        env = os.environ.get("SIM_SWEEP_CHECKPOINT", "")
+        checkpoint = env not in ("", "0") and (env
+                                               if env != "1" else "auto")
+    if not checkpoint:
+        return None
+    from repro.workloads import trace_cache_dir
+    d = trace_cache_dir()
+    if d is None:
+        return None
+    key = (checkpoint_key(jobs, chunk, length)
+           if checkpoint in (True, "auto")
+           else str(checkpoint))
+    return os.path.join(d, f"sweepckpt_{key}")
+
+
 def run_bucketed(jobs: Sequence[SimJob], *, chunk: int,
                  devices: int | None = None,
-                 length: int | None = None
+                 length: int | None = None,
+                 checkpoint: "bool | str | None" = None,
+                 watchdog_s: float | None = None
                  ) -> Tuple[List[SimResult], Dict]:
     """The sweep engine's dispatch core, reusable on any heterogeneous
     job list (the design-space search feeds whole candidate populations
@@ -221,9 +330,31 @@ def run_bucketed(jobs: Sequence[SimJob], *, chunk: int,
     so compile count is bounded by the number of buckets, never the
     number of jobs.
 
+    Resilience (both off by default; benchmarks and the nightly enable
+    them):
+
+    * ``checkpoint`` — persist each completed bucket's results to
+      ``.trace_cache/sweepckpt_<key>_b<i>.npz`` (integrity-checked,
+      atomic; key covers engine sources + every job's machine/mechs/
+      trace bytes).  A killed run resumed with the same jobs loads the
+      finished buckets bit-exactly and dispatches ONLY the rest —
+      resumed buckets cost zero compiles (``runner_cache_info``-
+      visible).  ``True``/"auto" derives the key; a string is used as
+      the key verbatim; None consults ``SIM_SWEEP_CHECKPOINT``.
+    * ``watchdog_s`` — wall-clock deadline per bucket dispatch; a hung
+      dispatch (or an injected ``dispatch`` fault) gets ONE retry
+      after :func:`repro.sim.simulator.clear_runner_cache`.  None
+      consults ``SIM_DISPATCH_TIMEOUT`` (seconds; 0 = no deadline,
+      injected faults still exercise the retry path).
+
     Returns the per-job :class:`SimResult` list (job order preserved)
     plus the bucketing/compile stats dict ``sweep()`` exposes as
     ``SweepResult.stats`` (minus the grid-level entries)."""
+    if watchdog_s is None:
+        watchdog_s = float(os.environ.get("SIM_DISPATCH_TIMEOUT", "0")
+                           or 0)
+    ckpt_prefix = _resolve_checkpoint(checkpoint, jobs, chunk, length)
+
     buckets: "OrderedDict[Tuple, List[int]]" = OrderedDict()
     for i, j in enumerate(jobs):
         key = (machine_shape(j.mach), _walk_fns(j.mechs))
@@ -232,26 +363,59 @@ def run_bucketed(jobs: Sequence[SimJob], *, chunk: int,
     results: List[SimResult] = [None] * len(jobs)   # type: ignore[list-item]
     info0 = runner_cache_info()
     per_bucket = []
+    resumed_buckets = 0
     t0 = time.perf_counter()
-    for (shape, wf), idxs in buckets.items():
-        before = runner_cache_info().misses
-        tm: Dict = {}
-        outs = simulate_batch_varied([jobs[i] for i in idxs], length,
-                                     chunk=chunk, devices=devices,
-                                     timings=tm)
-        for i, res in zip(idxs, outs):
-            results[i] = res
-        per_bucket.append({
-            "shape": f"{shape.num_cores}c/" + ",".join(
-                f"{n}:{s}x{w}" for n, s, w in shape.tables),
+    for bi, ((shape, wf), idxs) in enumerate(buckets.items()):
+        shape_str = f"{shape.num_cores}c/" + ",".join(
+            f"{n}:{s}x{w}" for n, s, w in shape.tables)
+        entry = {
+            "shape": shape_str,
             "walk_fns": [getattr(f, "__qualname__", str(f)) if f else None
                          for f in wf],
             "points": list(idxs),
             "lanes": len(idxs),
-            "compiles": runner_cache_info().misses - before,
-            "total_s": round(tm.get("total_s", 0.0), 3),
-            "compile_s_est": round(tm.get("compile_s_est", 0.0), 3),
-        })
+        }
+        ckpt_path = (f"{ckpt_prefix}_b{bi:03d}.npz"
+                     if ckpt_prefix else None)
+        outs = None
+        if ckpt_path is not None:
+            arrays = resilience.read_npz(ckpt_path)
+            if arrays is not None:
+                outs = _ckpt_unpack(arrays, len(idxs))
+        if outs is not None:
+            resumed_buckets += 1
+            resilience.log_event(
+                "resume", f"bucket {bi} ({shape_str}, {len(idxs)} lanes) "
+                          f"restored from {os.path.basename(ckpt_path)}")
+            entry.update(compiles=0, total_s=0.0, compile_s_est=0.0,
+                         resumed=True)
+        else:
+            before = runner_cache_info().misses
+            tm: Dict = {}
+            tag = f"bucket{bi}:{shape_str}"
+
+            def _dispatch():
+                inj = resilience.fault_injector()
+                if inj is not None and inj.fires("dispatch", tag):
+                    raise resilience.DispatchTimeout(
+                        f"injected dispatch fault: {tag}")
+                return simulate_batch_varied(
+                    [jobs[i] for i in idxs], length, chunk=chunk,
+                    devices=devices, timings=tm)
+
+            outs = resilience.watchdog_call(
+                _dispatch, watchdog_s, tag=tag, retries=1,
+                on_timeout=clear_runner_cache)
+            entry.update(
+                compiles=runner_cache_info().misses - before,
+                total_s=round(tm.get("total_s", 0.0), 3),
+                compile_s_est=round(tm.get("compile_s_est", 0.0), 3),
+                resumed=False)
+            if ckpt_path is not None:
+                resilience.write_npz(ckpt_path, _ckpt_pack(outs))
+        for i, res in zip(idxs, outs):
+            results[i] = res
+        per_bucket.append(entry)
     return results, {
         "points": len(jobs),
         "buckets": len(buckets),
@@ -259,6 +423,7 @@ def run_bucketed(jobs: Sequence[SimJob], *, chunk: int,
         # count the shapes themselves for the compile accounting
         "distinct_shapes": len({shape for shape, _ in buckets}),
         "runner_compiles": runner_cache_info().misses - info0.misses,
+        "resumed_buckets": resumed_buckets,
         "wall_s": round(time.perf_counter() - t0, 3),
         "chunk": chunk,
         "per_bucket": per_bucket,
@@ -287,7 +452,9 @@ def sweep(grid: GridLike, *, base: str | None = None,
           mechs: Tuple[str, ...] | None = None,
           preset: str | None = None, trace_len: int | None = None,
           seed: int | None = None, chunk: int | None = None,
-          devices: int | None = None) -> SweepResult:
+          devices: int | None = None,
+          checkpoint: "bool | str | None" = None,
+          watchdog_s: float | None = None) -> SweepResult:
     """Run a sensitivity grid, one batched dispatch per shape bucket.
 
     ``grid`` is an ordered ``axis -> values`` mapping (see module
@@ -348,7 +515,9 @@ def sweep(grid: GridLike, *, base: str | None = None,
                                          seed=seed, preset=sim_preset)
     jobs = [SimJob(p.mach, traces[p.workload, p.mach.num_cores], p.mechs)
             for p in points]
-    outs, stats = run_bucketed(jobs, chunk=chunk, devices=devices)
+    outs, stats = run_bucketed(jobs, chunk=chunk, devices=devices,
+                               checkpoint=checkpoint,
+                               watchdog_s=watchdog_s)
     results = np.empty(dims, object)
     for i, res in enumerate(outs):
         results[np.unravel_index(i, dims)] = res

@@ -1,0 +1,5 @@
+"""Cross-cutting runtime utilities (resilience layer)."""
+from repro.util.resilience import (DispatchTimeout, Fault,  # noqa: F401
+                                   FaultInjector, fault_injector,
+                                   inject_faults, log_event,
+                                   recovery_events, watchdog_call)

@@ -1,0 +1,414 @@
+"""Resilience layer: integrity-checked caches, fault injection, watchdogs.
+
+The repo's long pipelines (trace ingest -> batched sim -> sweep/search
+-> costed serving) lean on four on-disk caches that all live in the
+trace-cache directory: generated-trace npz files, ingested-trace npz
+files, ``costmodel_*.json`` memos and ``search_evals_*.json`` eval
+caches.  Before this module each had its own ad-hoc degrade path, and
+none could tell a *corrupted* entry from a missing one — a truncated
+npz left behind by a killed nightly run crashed the next run instead of
+being recomputed.  This module unifies them behind one contract:
+
+  * **Atomic, verified writes** — every entry is written to a temp file
+    and renamed into place together with a ``<name>.sha256`` sidecar
+    holding the content digest.  Concurrent writers never publish torn
+    files; any filesystem failure (read-only checkout, full disk,
+    injected OSError) degrades to cache-off, never to a crash.
+  * **Verified reads with quarantine** — a read first checks the
+    sidecar digest (legacy entries without a sidecar are still parsed,
+    but a parse failure is treated the same as a digest mismatch).  A
+    corrupted entry is moved to ``<cache-dir>/quarantine/`` — keeping
+    the evidence for postmortems while guaranteeing the next run never
+    trips over it again — and the caller transparently recomputes.
+  * **Recovery visibility** — every degrade decision (quarantine,
+    write failure, watchdog retry, checkpoint resume, preemption)
+    lands in a bounded process-wide event log
+    (:func:`recovery_events`) that benchmark stage summaries and
+    ``scripts/chaos.py`` print, so a fault can never heal silently.
+
+Fault injection
+---------------
+:class:`FaultInjector` replays *deterministic* fault plans against the
+instrumented sites so chaos tests can prove end-to-end that injected
+faults cost only retries (outputs stay bit-exact vs a fault-free run):
+
+  ``cache_read``   the matching read is treated as corrupt: the entry
+                   is quarantined and recomputed
+  ``cache_write``  the matching write raises ``OSError`` inside the
+                   degrade path: the run continues cache-off
+  ``dispatch``     the matching simulator dispatch raises
+                   :class:`DispatchTimeout`: the watchdog clears the
+                   compiled-runner cache and retries once
+  ``evict``        the serving scheduler preempts the matching live
+                   sequence mid-decode: pages freed, translation-cache
+                   versions bumped, request re-queued for re-prefill
+
+Each fault names its site, an occurrence set (``at``) counted per
+(site, match) pair, and an optional substring ``match`` on the site tag
+(a cache path, a bucket label, a sequence id) — so a plan like "corrupt
+the second costmodel read" replays identically every run.  Install a
+plan process-wide with :func:`inject_faults` (a context manager) — the
+instrumented sites consult :func:`fault_injector` and fire at most the
+planned occurrences.
+
+Watchdog
+--------
+:func:`watchdog_call` bounds one dispatch: the callable runs on a
+worker thread and a join timeout turns a hung dispatch into
+:class:`DispatchTimeout`; one retry runs after the caller's
+``on_timeout`` hook (the sweep engine clears the compiled-runner cache
+there, the recovery a wedged XLA executable actually needs).  A
+``timeout_s`` of 0 skips the thread entirely — injected
+``DispatchTimeout`` still retries, so chaos plans exercise the exact
+recovery path without real hangs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+import os
+import tempfile
+import threading
+from collections import deque
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+#: sidecar suffix holding the hex sha256 of the entry's bytes
+SIDECAR_SUFFIX = ".sha256"
+#: subdirectory (of the entry's cache dir) corrupted entries move to
+QUARANTINE_DIR = "quarantine"
+
+
+class DispatchTimeout(RuntimeError):
+    """A watchdogged dispatch exceeded its deadline (or a fault plan
+    injected one)."""
+
+
+# ---------------------------------------------------------------------------
+# recovery event log
+# ---------------------------------------------------------------------------
+_EVENTS: "deque[Tuple[str, str]]" = deque(maxlen=512)
+_EVENTS_LOCK = threading.Lock()
+
+
+def log_event(kind: str, detail: str) -> None:
+    """Record one recovery decision (quarantine / cache_off / retry /
+    resume / evict / shed / ...) in the bounded process-wide log."""
+    with _EVENTS_LOCK:
+        _EVENTS.append((kind, detail))
+
+
+def recovery_events(clear: bool = False) -> List[Tuple[str, str]]:
+    """The recovery decisions taken so far, oldest first."""
+    with _EVENTS_LOCK:
+        out = list(_EVENTS)
+        if clear:
+            _EVENTS.clear()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One planned fault: fire at the given per-(site, match)
+    occurrence indices of ``site`` whose tag contains ``match``."""
+
+    site: str                    # cache_read|cache_write|dispatch|evict
+    at: Tuple[int, ...] = (0,)
+    match: str = ""
+
+    def __post_init__(self):
+        if self.site not in ("cache_read", "cache_write", "dispatch",
+                             "evict"):
+            raise ValueError(f"unknown fault site {self.site!r}")
+
+
+class FaultInjector:
+    """Deterministic fault plan replay (see module docstring).
+
+    ``seed`` only matters for plans built with :meth:`from_plan` that
+    draw occurrence indices; explicit :class:`Fault` lists replay
+    as-is.  The injector counts occurrences per (site, match) pair, so
+    a plan is insensitive to unrelated traffic on the same site with
+    different tags.
+    """
+
+    def __init__(self, faults: Iterable[Fault] = (), seed: int = 0):
+        self.faults = tuple(faults)
+        self.seed = seed
+        self._counts: Dict[Tuple[str, str], int] = {}
+        self.fired: List[Tuple[str, str, int]] = []   # (site, tag, idx)
+
+    def fires(self, site: str, tag: str = "") -> bool:
+        """Advance the matching occurrence counters; True iff any
+        planned fault fires at this occurrence."""
+        hit = False
+        for f in self.faults:
+            if f.site != site or f.match not in tag:
+                continue
+            key = (site, f.match)
+            idx = self._counts.get(key, 0)
+            self._counts[key] = idx + 1
+            if idx in f.at:
+                hit = True
+                self.fired.append((site, tag, idx))
+                log_event("fault_injected", f"{site}[{idx}] {tag}")
+        return hit
+
+    @classmethod
+    def from_plan(cls, name: str, seed: int = 0) -> "FaultInjector":
+        """A named fault plan (the chaos-test matrix; see
+        ``scripts/chaos.py``)."""
+        plans: Dict[str, Tuple[Fault, ...]] = {
+            # corrupt every cache family once: trace npz, costmodel
+            # memo, search eval cache — plus one failed write
+            "cache_corrupt": (
+                Fault("cache_read", at=(0,)),
+                Fault("cache_write", at=(0,)),
+            ),
+            # first dispatch of a bucket hangs; watchdog clears the
+            # runner cache and the retry completes
+            "dispatch_hang": (Fault("dispatch", at=(0,)),),
+            # repeated mid-decode evictions: preempt -> re-prefill
+            "evict_storm": (Fault("evict", at=(0, 1, 2)),),
+        }
+        if name not in plans:
+            raise KeyError(f"unknown fault plan {name!r}; "
+                           f"available: {sorted(plans)}")
+        return cls(plans[name], seed=seed)
+
+
+_INJECTOR: Optional[FaultInjector] = None
+
+
+def fault_injector() -> Optional[FaultInjector]:
+    """The installed process-wide injector, or None (the common case —
+    every instrumented site is a dict lookup away from free)."""
+    return _INJECTOR
+
+
+class inject_faults:
+    """Context manager installing ``injector`` process-wide."""
+
+    def __init__(self, injector: FaultInjector):
+        self.injector = injector
+
+    def __enter__(self) -> FaultInjector:
+        global _INJECTOR
+        self._prev = _INJECTOR
+        _INJECTOR = self.injector
+        return self.injector
+
+    def __exit__(self, *exc) -> None:
+        global _INJECTOR
+        _INJECTOR = self._prev
+
+
+# ---------------------------------------------------------------------------
+# integrity-checked cache entries
+# ---------------------------------------------------------------------------
+def _sidecar(path: str) -> str:
+    return path + SIDECAR_SUFFIX
+
+
+def quarantine(path: str, reason: str) -> Optional[str]:
+    """Move a corrupted cache entry (and its sidecar) into the
+    ``quarantine/`` subdirectory of its cache dir; returns the new
+    path (None if the move itself failed — the entry is then unlinked
+    so it cannot poison the next run either)."""
+    qdir = os.path.join(os.path.dirname(path), QUARANTINE_DIR)
+    dest = os.path.join(qdir, os.path.basename(path))
+    try:
+        os.makedirs(qdir, exist_ok=True)
+        n = 0
+        while os.path.exists(dest):
+            n += 1
+            dest = os.path.join(
+                qdir, f"{os.path.basename(path)}.{n}")
+        os.replace(path, dest)
+        for extra in (_sidecar(path),):
+            if os.path.exists(extra):
+                os.replace(extra, dest + SIDECAR_SUFFIX)
+        log_event("quarantine", f"{path} -> {dest} ({reason})")
+        return dest
+    except OSError:
+        for p in (path, _sidecar(path)):
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+        log_event("quarantine", f"{path} unlinked ({reason}; "
+                                "quarantine dir unwritable)")
+        return None
+
+
+def write_bytes(path: str, data: bytes) -> bool:
+    """Atomically publish ``data`` at ``path`` with its sha256 sidecar.
+
+    Any filesystem failure — or an injected ``cache_write`` fault —
+    degrades to cache-off (returns False); the caller keeps its
+    computed value and simply doesn't memoize it.
+    """
+    tmp = None
+    try:
+        inj = fault_injector()
+        if inj is not None and inj.fires("cache_write", path):
+            raise OSError(f"injected cache_write fault: {path}")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+        # sidecar first: a crash between the two renames leaves a
+        # sidecar without an entry (harmless), never an unverifiable
+        # entry
+        digest = hashlib.sha256(data).hexdigest()
+        fd2, tmp2 = tempfile.mkstemp(dir=os.path.dirname(path),
+                                     suffix=".tmp")
+        with os.fdopen(fd2, "w") as f:
+            f.write(digest)
+        os.replace(tmp2, _sidecar(path))
+        os.replace(tmp, path)
+        return True
+    except OSError as e:
+        log_event("cache_off", f"write failed: {path} ({e})")
+        for p in (tmp,):
+            if p is not None and os.path.exists(p):
+                try:
+                    os.unlink(p)
+                except OSError:
+                    pass
+        return False
+
+
+def read_bytes(path: str) -> Optional[bytes]:
+    """Verified read of one cache entry; None means "recompute".
+
+    Missing entry -> None.  Sidecar digest mismatch, unreadable file,
+    or an injected ``cache_read`` fault -> the entry is quarantined
+    and None is returned; the caller recomputes instead of crashing.
+    """
+    if not os.path.exists(path):
+        return None
+    inj = fault_injector()
+    if inj is not None and inj.fires("cache_read", path):
+        quarantine(path, "injected cache_read fault")
+        return None
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError as e:
+        quarantine(path, f"unreadable: {e}")
+        return None
+    sc = _sidecar(path)
+    if os.path.exists(sc):
+        try:
+            with open(sc) as f:
+                want = f.read().strip()
+        except OSError:
+            want = ""
+        if want and hashlib.sha256(data).hexdigest() != want:
+            quarantine(path, "sha256 sidecar mismatch")
+            return None
+    return data
+
+
+def read_npz(path: str) -> Optional[Dict[str, np.ndarray]]:
+    """Verified npz read -> array dict; corrupt entries (bit flips,
+    truncation — with or without a sidecar) are quarantined and None
+    is returned for transparent recompute."""
+    data = read_bytes(path)
+    if data is None:
+        return None
+    try:
+        with np.load(io.BytesIO(data), allow_pickle=False) as z:
+            return {k: z[k] for k in z.files}
+    except Exception as e:               # zipfile/zlib/ValueError zoo
+        quarantine(path, f"npz parse failed: {type(e).__name__}: {e}")
+        return None
+
+
+def write_npz(path: str, arrays: Dict) -> bool:
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return write_bytes(path, buf.getvalue())
+
+
+def read_json(path: str):
+    """Verified json read; corrupt entries quarantined, None returned."""
+    data = read_bytes(path)
+    if data is None:
+        return None
+    try:
+        return json.loads(data.decode("utf-8"))
+    except Exception as e:
+        quarantine(path, f"json parse failed: {type(e).__name__}: {e}")
+        return None
+
+
+def write_json(path: str, obj, **dump_kw) -> bool:
+    return write_bytes(path,
+                       json.dumps(obj, **dump_kw).encode("utf-8"))
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+def watchdog_call(fn: Callable[[], object], timeout_s: float, *,
+                  tag: str = "", retries: int = 1,
+                  on_timeout: Optional[Callable[[], None]] = None):
+    """Run ``fn`` under a wall-clock deadline with bounded retries.
+
+    ``timeout_s > 0``: ``fn`` runs on a daemon worker thread; if it
+    has not finished after ``timeout_s`` seconds the attempt counts as
+    :class:`DispatchTimeout` (the hung thread is abandoned — a wedged
+    XLA dispatch cannot be cancelled, only routed around).
+    ``timeout_s <= 0``: ``fn`` runs inline — only *injected*
+    ``DispatchTimeout`` can fire, which is how chaos plans exercise
+    the retry path deterministically without real hangs.
+
+    On timeout, ``on_timeout()`` runs before the retry (the sweep
+    engine clears the compiled-runner cache there).  The last attempt's
+    timeout propagates.
+    """
+    last: Optional[DispatchTimeout] = None
+    for attempt in range(retries + 1):
+        try:
+            if timeout_s and timeout_s > 0:
+                result: list = []
+                error: list = []
+
+                def _run():
+                    try:
+                        result.append(fn())
+                    except BaseException as e:   # noqa: BLE001
+                        error.append(e)
+
+                t = threading.Thread(target=_run, daemon=True,
+                                     name=f"watchdog:{tag}")
+                t.start()
+                t.join(timeout_s)
+                if t.is_alive():
+                    raise DispatchTimeout(
+                        f"{tag or 'dispatch'} exceeded {timeout_s}s "
+                        f"(attempt {attempt + 1})")
+                if error:
+                    raise error[0]
+                return result[0]
+            return fn()
+        except DispatchTimeout as e:
+            last = e
+            log_event("watchdog_timeout",
+                      f"{tag} attempt {attempt + 1}: {e}")
+            if attempt >= retries:
+                raise
+            if on_timeout is not None:
+                on_timeout()
+            log_event("watchdog_retry", f"{tag} retrying "
+                                        f"(attempt {attempt + 2})")
+    raise last if last else RuntimeError("unreachable")

@@ -37,11 +37,12 @@ the generators change.
 from __future__ import annotations
 
 import os
-import tempfile
 import zlib
 from typing import Dict, List, Sequence
 
 import numpy as np
+
+from repro.util import resilience
 
 FOOTPRINT_SCALE = 1.0
 PAGE_LINES = 64  # 4KB / 64B
@@ -240,13 +241,19 @@ def _cache_path(workload: str, cores: int, length: int, seed: int,
 
 
 def _cache_load(path: str | None) -> Dict[str, np.ndarray] | None:
-    if path is None or not os.path.exists(path):
+    """Integrity-checked load: a truncated or bit-flipped entry (killed
+    nightly writer, disk corruption) is QUARANTINED and None returned —
+    the caller regenerates, exactly like the OSError degrade path."""
+    if path is None:
+        return None
+    arrays = resilience.read_npz(path)
+    if arrays is None:
         return None
     try:
-        with np.load(path) as z:
-            return {"vpn": z["vpn"], "off": z["off"], "work": z["work"],
-                    "pages": int(z["pages"])}
-    except Exception:                    # corrupt/partial file: regenerate
+        return {"vpn": arrays["vpn"], "off": arrays["off"],
+                "work": arrays["work"], "pages": int(arrays["pages"])}
+    except KeyError:                     # entry from an older schema
+        resilience.quarantine(path, "missing trace arrays")
         return None
 
 
@@ -254,20 +261,13 @@ def _cache_store(path: str | None, trace: Dict[str, np.ndarray]) -> None:
     if path is None:
         return
     # the cache is an optimization: any filesystem failure (read-only
-    # checkout, unwritable SIM_TRACE_CACHE) degrades to cache-off
-    tmp = None
-    try:
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        # write-to-temp + rename: concurrent writers never serve torn files
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   suffix=".tmp")
-        with os.fdopen(fd, "wb") as f:
-            np.savez(f, vpn=trace["vpn"], off=trace["off"],
-                     work=trace["work"], pages=trace["pages"])
-        os.replace(tmp, path)
-    except OSError:
-        if tmp is not None and os.path.exists(tmp):
-            os.unlink(tmp)
+    # checkout, unwritable SIM_TRACE_CACHE) degrades to cache-off.
+    # Writes are atomic (temp + rename) with a sha256 sidecar, so
+    # concurrent writers never publish torn files and readers detect
+    # corruption (repro.util.resilience owns both halves).
+    resilience.write_npz(path, {"vpn": trace["vpn"], "off": trace["off"],
+                                "work": trace["work"],
+                                "pages": trace["pages"]})
 
 
 # ---------------------------------------------------------------------------

@@ -58,8 +58,11 @@ class TestCostModel:
         a = TranslationCostModel.from_sim(mach)
         assert a.source == "sweep"
         memos = [f for f in os.listdir(tmp_path)
-                 if f.startswith("costmodel_")]
+                 if f.startswith("costmodel_")
+                 and not f.endswith(".sha256")]
         assert len(memos) == 1
+        # integrity sidecar rides along with the memo
+        assert os.path.exists(os.path.join(tmp_path, memos[0] + ".sha256"))
         b = TranslationCostModel.from_sim(mach)
         assert b.source == "cache"
         assert b.costs == a.costs and b.mechs == a.mechs

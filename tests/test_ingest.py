@@ -219,7 +219,8 @@ class TestCache:
         monkeypatch.setenv("SIM_TRACE_CACHE", str(tmp_path / "cache"))
         p = write_champsim(tmp_path / "t.champsim.xz", champsim_records())
         cold = ingest_trace(p, 2, length=64)
-        files = list((tmp_path / "cache").iterdir())
+        files = [f for f in (tmp_path / "cache").iterdir()
+                 if not f.name.endswith(".sha256")]
         assert len(files) == 1 and files[0].name.startswith("ingest_")
         warm = ingest_trace(p, 2, length=64)            # served from npz
         nocache = ingest_trace(p, 2, length=64, use_cache=False)
@@ -236,10 +237,12 @@ class TestCache:
         p = write_champsim(tmp_path / "t.champsim", champsim_records())
         ingest_trace(p, 2, length=64)
         ingest_trace(p, 2, length=64, page_bytes=8192)
-        assert len(list((tmp_path / "cache").iterdir())) == 2
+        count = lambda: len([f for f in (tmp_path / "cache").iterdir()
+                             if not f.name.endswith(".sha256")])
+        assert count() == 2
         write_champsim(p, champsim_records(seed=9))     # new content
         ingest_trace(p, 2, length=64)
-        assert len(list((tmp_path / "cache").iterdir())) == 3
+        assert count() == 3
 
 
 # ---------------------------------------------------------------------------

@@ -81,3 +81,111 @@ def test_occupancy_driven_mode_switch():
         kvm.append_token(0)
     mode1, _, _ = sched.step_tables()
     assert mode1 == BT.FLAT              # 14/16 occupancy
+
+
+# ---------------------------------------------------------------------------
+# preemption-safe serving (resilience layer)
+# ---------------------------------------------------------------------------
+def _run_tokens(prompts, new_tokens=5, injector=None, **eng_kw):
+    from repro.util import resilience
+    kw = dict(max_batch=3, max_len=48, page_size=8)
+    kw.update(eng_kw)
+    eng = ServeEngine(CFG, PARAMS, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(req_id=i, prompt=p, max_new_tokens=new_tokens))
+    if injector is not None:
+        with resilience.inject_faults(injector):
+            done = eng.run()
+    else:
+        done = eng.run()
+    return eng, {r.req_id: list(r.generated) for r in done}
+
+
+def test_evict_storm_is_bit_exact():
+    """Three injected mid-decode evictions cost only retries: preempted
+    requests re-prefill prompt + generated-so-far and every final token
+    stream matches the fault-free run."""
+    from repro.util import resilience
+    prompts = _prompts(4, seed=5)
+    _, clean = _run_tokens(prompts)
+    inj = resilience.FaultInjector.from_plan("evict_storm")
+    eng, faulted = _run_tokens(prompts, injector=inj)
+    assert faulted == clean
+    assert eng.sched.stats["preempted"] >= 3
+    assert eng.sched.stats["resumed"] >= 1
+    assert eng.sched.stats["shed"] == 0
+
+
+def test_overload_evicts_lowest_priority_and_resumes():
+    """KV pool exhaustion during decode growth sheds the lowest-
+    priority runner; both requests still finish with oracle tokens."""
+    prompts = [p[:4] for p in _prompts(2, seed=6)]
+    eng = ServeEngine(CFG, PARAMS, max_batch=3, max_len=48, page_size=8)
+    hog = eng.kvm.pool.allocate(eng.kvm.pool.free_pages - 3)
+    assert hog                               # pool is genuinely tight
+    eng.submit(Request(req_id=0, prompt=prompts[0], max_new_tokens=8,
+                       priority=1))
+    eng.submit(Request(req_id=1, prompt=prompts[1], max_new_tokens=8))
+    done = eng.run(max_steps=500)
+    got = {r.req_id: r.generated for r in done}
+    assert eng.sched.stats["preempted"] >= 1
+    assert not eng.sched.failed              # resumed, not shed
+    for i in (0, 1):
+        want = greedy_reference(CFG, PARAMS, prompts[i], 8,
+                                kv_mode="paged_flat", max_len=48,
+                                page_size=8)
+        assert got[i] == want, i
+
+
+def test_deadline_expired_request_is_dropped():
+    prompts = [p[:4] for p in _prompts(2, seed=7)]
+    eng = ServeEngine(CFG, PARAMS, max_batch=1, max_len=48, page_size=8)
+    eng.submit(Request(req_id=0, prompt=prompts[0], max_new_tokens=4))
+    eng.submit(Request(req_id=1, prompt=prompts[1], max_new_tokens=4,
+                       deadline_steps=2))    # can't make it behind req 0
+    done = eng.run(max_steps=200)
+    assert [r.req_id for r in done] == [0]
+    assert eng.sched.stats["deadline_dropped"] == 1
+    assert [(r.req_id, r.failed) for r in eng.sched.failed] == [
+        (1, "deadline")]
+
+
+def test_invalidate_unknown_id_is_noop_and_recycled_ids_stay_fresh():
+    """invalidate() on a never-admitted id must not bump the shared
+    version floor; recycled req_ids under eviction never hit stale
+    rows."""
+    from repro.core.translation_cache import TranslationCache
+    tc = TranslationCache(capacity=8)
+    floor0 = tc.version("never-admitted")
+    tc.invalidate("never-admitted")          # pure no-op
+    tc.invalidate("never-admitted")
+    assert tc.version("never-admitted") == floor0
+    assert tc.version("any-other-id") == floor0
+
+    # live id: insert -> invalidate advances PAST its versions
+    row = np.arange(4, dtype=np.int32)
+    tc.insert("req-7", None, row)
+    v_live = tc.version("req-7")
+    tc.invalidate("req-7")
+    assert tc.version("req-7") > v_live      # recycled id starts above
+    assert tc.lookup("req-7") is None        # stale row unreachable
+    # double-invalidate after retirement stays a no-op
+    v_after = tc.version("req-7")
+    tc.invalidate("req-7")
+    assert tc.version("req-7") == v_after
+
+
+def test_recycled_req_id_under_eviction_reprefills_cleanly():
+    """The same req_id submitted again after completion (id recycling)
+    must decode exactly like a fresh id — the version floor guarantees
+    no stale translation rows survive."""
+    p = _prompts(1, seed=8)[0]
+    eng = ServeEngine(CFG, PARAMS, max_batch=2, max_len=48, page_size=8)
+    eng.submit(Request(req_id=42, prompt=p, max_new_tokens=4))
+    first = eng.run()
+    eng.submit(Request(req_id=42, prompt=p, max_new_tokens=4))
+    second = eng.run()
+    assert first[0].generated == second[0].generated
+    want = greedy_reference(CFG, PARAMS, p, 4, kv_mode="paged_flat",
+                            max_len=48, page_size=8)
+    assert second[0].generated == want

@@ -64,8 +64,10 @@ def test_stable_across_python_hash_seeds():
 def test_trace_cache_roundtrip(tmp_path, monkeypatch):
     monkeypatch.setenv("SIM_TRACE_CACHE", str(tmp_path))
     fresh = generate_trace("pr", 2, 300, seed=42)
-    files = list(tmp_path.iterdir())
-    assert len(files) == 1 and files[0].suffix == ".npz"
+    entries = [f for f in tmp_path.iterdir() if f.suffix == ".npz"]
+    assert len(entries) == 1
+    # every entry carries its integrity sidecar (resilience layer)
+    assert entries[0].with_name(entries[0].name + ".sha256").exists()
     cached = generate_trace("pr", 2, 300, seed=42)
     for k in ("vpn", "off", "work"):
         np.testing.assert_array_equal(fresh[k], cached[k])
