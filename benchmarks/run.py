@@ -18,6 +18,10 @@ Sections (stages):
   * --search:   seeded design-space search + frontier-regression gate
                 (benchmarks/sim_search.py); ``--search-space`` selects
                 the space (default: the nightly ``default`` space)
+  * --zoo:      related-work mechanism zoo — sim + costed serving +
+                zoo-space search + collision analysis, with an
+                explicit verdict vs ndpage_search
+                (benchmarks/sim_zoo.py)
 
 ``--fast`` (or SIM_FIGS_FAST=1) runs the simulator figures on the smoke
 preset — same engine and orderings, CI wall-clock.  ``--sim-only`` skips
@@ -101,6 +105,9 @@ def main(argv=None) -> None:
                         "(benchmarks/sim_search.py)")
     p.add_argument("--search-space", default="default",
                    help="SEARCH_SPACES name for --search")
+    p.add_argument("--zoo", action="store_true",
+                   help="also run the related-work mechanism zoo "
+                        "comparison (benchmarks/sim_zoo.py)")
     p.add_argument("--stage-timeout", type=float,
                    default=float(os.environ.get("BENCH_STAGE_TIMEOUT",
                                                 "0") or 0),
@@ -237,6 +244,15 @@ def main(argv=None) -> None:
         if failed:
             raise RuntimeError(f"search gates FAILED: {failed}")
 
+    def st_zoo():
+        from benchmarks import sim_zoo
+        srows, ssummary = sim_zoo.run_all(fast=fast)
+        _print_rows(srows)
+        sim_zoo.merge_into_bench_json(ssummary, bench_sim_path)
+        failed = sim_zoo.failed_checks(ssummary)
+        if failed:
+            raise RuntimeError(f"zoo checks FAILED: {failed}")
+
     stage("figures", st_figures)
     if not args.sim_only:
         stage("kernels", st_kernels)
@@ -248,6 +264,8 @@ def main(argv=None) -> None:
         stage("serving", st_serving)
     if args.search:
         stage("search", st_search)
+    if args.zoo:
+        stage("zoo", st_zoo)
 
     # the per-stage summary: every stage with wall time and exit detail
     # — failures quote the exception, timeouts the abandoned deadline,

@@ -122,6 +122,56 @@ def _rows_cores(name: str, r) -> Tuple[List[Row], Dict]:
                       for i, c in enumerate(r.axes["cores"])}}
 
 
+def _rows_zoo(name: str, r) -> Tuple[List[Row], Dict]:
+    """Related-work zoo on the zoo machine: per-workload speedups for
+    every mechanism, plus ordering checks loose enough to survive trace
+    regeneration but tight enough to catch a broken model (ideal is an
+    upper bound; Victima's serial ctlb probe costs bounded overhead)."""
+    mech_names = [m for m in r.results.flat[0].mechs if m != "radix"]
+    sp = {m: r.map(lambda x, m=m: x.speedup_vs()[m]) for m in mech_names}
+    rows: List[Row] = []
+    for j, w in enumerate(r.axes["workload"]):
+        per = " ".join(f"{m}={sp[m][..., j].mean():.3f}"
+                       for m in mech_names)
+        rows.append((f"sweep_{name}_{w}", 0.0, per))
+    ideal = sp["ideal"]
+    ok_ideal = bool(all((ideal >= sp[m] - 1e-6).all()
+                        for m in mech_names))
+    ok_victima = bool((sp["victima"] >= 0.9).all()) \
+        if "victima" in sp else True
+    checks = {"ideal_is_upper_bound": ok_ideal,
+              "victima_probe_overhead_bounded": ok_victima}
+    if "ndpage_search" in sp:
+        checks["ndpage_search_beats_radix"] = \
+            bool((sp["ndpage_search"] >= 1.0).all())
+    rows.append((f"sweep_{name}_check", 0.0,
+                 f"ideal upper bound + bounded victima overhead: "
+                 f"{'OK' if all(v for v in checks.values()) else 'FAIL'}"))
+    return rows, checks
+
+
+def _rows_victima_reach(name: str, r) -> Tuple[List[Row], Dict]:
+    """ctlb_kb reach sensitivity: victima must stay within
+    [0.9, ideal] at every reach — the probe overhead is bounded and the
+    cache-as-TLB can't beat perfect translation.  NO monotonicity check:
+    set-associative LRU reach is not monotone on every trace."""
+    v = r.map(lambda x: x.speedup_vs()["victima"])    # (ctlb_kb, wl)
+    ideal = r.map(lambda x: x.speedup_vs()["ideal"])
+    rows = [(f"sweep_{name}_{kb}kb", 0.0,
+             "victima " + " ".join(
+                 f"{w}={v[i, j]:.3f}"
+                 for j, w in enumerate(r.axes["workload"])))
+            for i, kb in enumerate(r.axes["ctlb_kb"])]
+    ok = bool((v >= 0.9).all()) and bool((v <= ideal + 1e-6).all())
+    rows.append((f"sweep_{name}_check", 0.0,
+                 f"victima within [0.9, ideal] at every reach: "
+                 f"{'OK' if ok else 'FAIL'} (min={v.min():.3f})"))
+    return rows, {"victima_bounded_everywhere": ok,
+                  "mean_by_ctlb_kb": {
+                      str(kb): round(float(v[i].mean()), 4)
+                      for i, kb in enumerate(r.axes["ctlb_kb"])}}
+
+
 _HANDLERS = {
     "pwc_size": lambda n, r: _rows_axis_sweep(n, r, "pwc_entries"),
     "tlb_size": lambda n, r: _rows_axis_sweep(n, r, "l1_dtlb.entries"),
@@ -129,6 +179,8 @@ _HANDLERS = {
     "l1_bypass": _rows_bypass,
     "flatten_level": _rows_flatten,
     "core_scaling": _rows_cores,
+    "zoo": _rows_zoo,
+    "victima_reach": _rows_victima_reach,
 }
 
 

@@ -57,6 +57,21 @@ class MachineConfig:
     mem_service: float = 14.0
     interconnect_hop: int = 4       # mesh hop latency, cycles
     interconnect_hops_to_mem: int = 8
+    # --- mechanism-zoo knobs (all inert at their defaults) ---
+    # cache-as-TLB (Victima): ctlb_kb KB of cache capacity repurposed as
+    # a second large TLB level, one translation per repurposed 64B line.
+    # 0 = the structure does not exist (compiled shapes unchanged);
+    # raising it is the occupancy/demotion knob — more lines demoted to
+    # translation duty, more reach.
+    ctlb_kb: int = 0
+    ctlb_ways: int = 8
+    ctlb_latency: int = 16          # L2-cache-latency-class probe
+    # multi-stack NDP memory (CODA): with >1 stacks a fraction
+    # (1 - 1/num_stacks) of memory accesses land in a REMOTE stack and
+    # pay stack_hop_cycles extra; co-location-aware mechanisms dodge
+    # most of it.  num_stacks=1 => no penalty anywhere.
+    num_stacks: int = 1
+    stack_hop_cycles: int = 36
 
 
 def cpu_machine(cores: int) -> MachineConfig:
@@ -81,6 +96,20 @@ def ndp_machine(cores: int) -> MachineConfig:
         mem_service=46.0,
         interconnect_hops_to_mem=1,
     )
+
+
+def zoo_machine(cores: int) -> MachineConfig:
+    """The mechanism-zoo comparison point: an NDP machine with the
+    related-work structures enabled — 256KB of cache repurposable as
+    translation reach (Victima) and a 4-stack memory with a
+    local-vs-remote latency split (CODA).  Mechanisms that do not use a
+    structure simply ignore it, so the paper's five behave exactly as on
+    ``ndp_machine`` apart from the multi-stack memory penalty every
+    non-co-locating design pays."""
+    base = ndp_machine(cores)
+    from dataclasses import replace
+    return replace(base, name=f"zoo-{cores}c", ctlb_kb=256,
+                   num_stacks=4)
 
 
 # Table II — workload trace parameters.  footprint_bytes reproduces the
@@ -194,6 +223,28 @@ SWEEPS: Dict[str, dict] = {
         base="ndp", cores=4,
         figure="memory-latency sensitivity (1 shape, 24 points, "
                "1 compile)"),
+    # mechanism zoo: the related-work designs (Victima cache-as-TLB,
+    # Picorel inverted/segment, CODA co-location, range table) against
+    # the paper set on the zoo machine (ctlb enabled, 4 memory stacks).
+    # One mechs tuple + one shape => ONE bucket for all 6 points.
+    "zoo": dict(
+        axes=(("ctlb_kb", (256,)),
+              ("num_stacks", (4,)),
+              ("workload", SWEEP_WORKLOADS)),
+        base="ndp", cores=4,
+        mechs=("radix", "ndpage_search", "victima", "picorel",
+               "coda", "range_table", "ideal"),
+        figure="related-work mechanism zoo (1 shape, 6 points, "
+               "1 compile)"),
+    # Victima reach: sweep the cache-capacity-repurposing (demotion /
+    # promotion occupancy) knob — each ctlb_kb is a distinct shape
+    "victima_reach": dict(
+        axes=(("ctlb_kb", (64, 128, 256, 512)),
+              ("workload", SWEEP_WORKLOADS)),
+        base="ndp", cores=4,
+        mechs=("radix", "victima", "ideal"),
+        figure="Victima cache-as-TLB reach sensitivity "
+               "(4 shapes, 24 points)"),
 }
 
 
@@ -238,6 +289,21 @@ SEARCH_SPACES: Dict[str, dict] = {
         workloads=SWEEP_WORKLOADS + SEARCH_FIXTURES,
         n_random=56, population=32, generations=6, offspring=24,
         trace_len=512, chunk=512, preset="smoke", seed=20250808),
+    # mechanism zoo as a genome knob: which related-work design to run
+    # is itself searched, alongside the structures they need (ctlb
+    # reach for victima, a fixed 4-stack memory so co-location
+    # matters).  ``zoo_mech`` overrides the structural triple; paper
+    # default is ``ndpage`` (see search.PAPER_DEFAULTS).
+    "zoo": dict(
+        knobs=(("pwc_entries", (16, 32)),
+               ("ctlb_kb", (0, 256)),
+               ("num_stacks", (4,)),
+               ("zoo_mech", ("ndpage_search", "victima", "picorel",
+                             "coda", "range_table"))),
+        cores=4,
+        workloads=("rnd", "bc", "xs") + SEARCH_FIXTURES,
+        n_random=12, population=8, generations=1, offspring=6,
+        trace_len=512, chunk=512, preset="smoke", seed=11),
     # PR fast lane: 1 generation over a 2-shape slice, sub-minute even
     # with cold compile caches
     "quick": dict(

@@ -27,10 +27,19 @@ import jax.numpy as jnp
 
 FLAT = "paged_flat"
 RADIX = "paged_radix"
+#: zoo organizations (cost-accounting only: range/segment descriptors
+#: and inverted-hash buckets don't need their own lookup structures —
+#: the flat table IS the mapping; they differ in how many 64B table
+#: lines a rebuild touches)
+SEGMENT = "paged_segment"
+INVERTED = "paged_inverted"
 
 #: int32 table entries per 64B cache line — the granularity the costed
 #: translate variants count "touched PTE lines" at
 PTE_PER_LINE = 16
+#: 16B (base, limit, target) range descriptors per 64B line — the
+#: SEGMENT organization's packing
+RANGES_PER_LINE = 4
 
 
 @dataclass
@@ -133,7 +142,36 @@ def count_pte_lines(table, mode: str) -> jnp.ndarray:
         mapped = mapped & ~dup[..., None]
         leaf_lines = _lines_of(mapped)                 # (B, n_dir)
         return dir_lines + leaf_lines.sum(-1).astype(jnp.int32)
+    if mode == SEGMENT:
+        return count_segment_lines(table)
+    if mode == INVERTED:
+        return count_inverted_lines(table)
     raise ValueError(mode)
+
+
+def count_segment_lines(flat: jnp.ndarray) -> jnp.ndarray:
+    """SEGMENT org line count for a flat row, (...,) int32: one range
+    descriptor per maximal run of *physically contiguous* mapped pages
+    (phys[i+1] == phys[i] + 1), :data:`RANGES_PER_LINE` descriptors per
+    64B line.  A perfectly contiguous row costs 1 line however long;
+    cost scales with fragmentation (run count), not row length — the
+    range-table story."""
+    mapped = flat >= 0
+    nd = flat.ndim
+    pad_cfg = [(0, 0)] * (nd - 1) + [(1, 0)]
+    prev_m = jnp.pad(mapped[..., :-1], pad_cfg, constant_values=False)
+    prev_p = jnp.pad(flat[..., :-1], pad_cfg, constant_values=-2)
+    new_run = mapped & (~prev_m | (flat != prev_p + 1))
+    runs = new_run.sum(-1)
+    return ((runs + RANGES_PER_LINE - 1) // RANGES_PER_LINE
+            ).astype(jnp.int32)
+
+
+def count_inverted_lines(flat: jnp.ndarray) -> jnp.ndarray:
+    """INVERTED org line count for a flat row, (...,) int32: every
+    mapped page's entry lives in its own hashed bucket line, so nothing
+    ever shares a line — the locality-free worst case a rebuild pays."""
+    return (flat >= 0).sum(-1).astype(jnp.int32)
 
 
 def translate_all_costed(table, mode: str

@@ -111,6 +111,134 @@ def ech_probe_lines(vpn: jnp.ndarray, num_ways: int = 2) -> jnp.ndarray:
     return jnp.stack(outs, axis=-1)
 
 
+def inverted_hash_lines(vpn: jnp.ndarray) -> jnp.ndarray:
+    """Picorel-style near-memory inverted page table: ONE set-associative
+    hashed bucket per lookup, no radix levels. (T,) -> (T, 1).
+
+    The bucket's ways share one 64B line, so a lookup is a single line
+    access whatever the associativity; vpns colliding into a bucket are
+    resolved within the line (the open-addressing spill is modelled by
+    ``inverted_table_insert`` for analysis, not the timing walk).
+    """
+    h = _mix(vpn.astype(jnp.uint32), salt=0xD5)
+    # 2^22 line-granular buckets in their own slice of the PT region
+    line = (h & jnp.uint32(0x003FFFFF)).astype(jnp.int32)
+    return (PT_REGION_LINE + (5 << 24) + line)[..., None]
+
+
+#: binary-search probes per range lookup (covers 2^12 extent ranks)
+RANGE_PROBES = 4
+#: 16B range descriptors (base, limit, target) -> 4 per 64B line
+RANGES_PER_LINE = 4
+#: pages per contiguous extent rank (2MB extents of 4KB pages)
+RANGE_EXTENT_SHIFT = 9
+
+
+def range_walk_lines(vpn: jnp.ndarray) -> jnp.ndarray:
+    """Range/segment-table translation: a binary search over sorted
+    range descriptors (the ``AddrTrans`` idiom). (T,) -> (T, 4).
+
+    Probe d looks at the search midpoint whose low ``keep`` rank bits
+    are cleared — early probes collapse onto a handful of descriptor
+    lines (the root of the binary search, effectively always cached),
+    later probes spread with the workload's extent fragmentation, so
+    the *miss* cost scales with log2(ranges)/fragmentation rather than
+    a fixed radix depth.
+    """
+    rank = (vpn >> RANGE_EXTENT_SHIFT).astype(jnp.int32)
+    outs = []
+    for d in range(RANGE_PROBES):
+        keep = 3 * (RANGE_PROBES - 1 - d)
+        idx = ((rank >> keep) << keep)
+        outs.append(PT_REGION_LINE + (6 << 24) + idx // RANGES_PER_LINE)
+    return jnp.stack(outs, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# host-side reference models for the zoo walks (property-test oracles +
+# zoo-benchmark occupancy/collision analysis; numpy, not jitted)
+# ---------------------------------------------------------------------------
+def _hash_np(x: np.ndarray, salt: int = 0xD5) -> np.ndarray:
+    """Numpy twin of ``_mix`` (same constants, same results).  Always
+    works on arrays: numpy warns on scalar uint32 overflow but wraps
+    array elements silently, which is the semantics we want."""
+    x = np.asarray(x).astype(np.uint32) ^ np.uint32(salt)
+    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+    return x ^ (x >> np.uint32(16))
+
+
+def inverted_table_insert(vpns: np.ndarray, log2_slots: int = 22
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Insert distinct vpns into an open-addressed inverted table.
+
+    Returns ``(slots, probes)``: the slot each vpn landed in (linear
+    probing from its hashed home) and the number of extra probes it
+    paid (0 = landed in its home slot).  Invariants the property tests
+    pin: no two live vpns share a slot, and a vpn pays probes > 0 iff
+    its home slot was already taken — aliasing is never silent.
+    """
+    vpns = np.asarray(vpns, dtype=np.int64)
+    if len(np.unique(vpns)) != len(vpns):
+        raise ValueError("inverted_table_insert requires distinct vpns")
+    n_slots = 1 << log2_slots
+    if len(vpns) > n_slots:
+        raise ValueError("more vpns than slots")
+    occupied: set = set()
+    slots = np.empty(len(vpns), np.int64)
+    probes = np.empty(len(vpns), np.int64)
+    homes = _hash_np(vpns) & np.uint32(n_slots - 1)
+    for i, home in enumerate(homes):
+        s, p = int(home), 0
+        while s in occupied:
+            s = (s + 1) & (n_slots - 1)
+            p += 1
+        occupied.add(s)
+        slots[i], probes[i] = s, p
+    return slots, probes
+
+
+def range_table_lookup(starts: np.ndarray, lengths: np.ndarray,
+                       targets: np.ndarray, addrs: np.ndarray
+                       ) -> np.ndarray:
+    """Binary-search lookup over sorted non-overlapping ranges.
+
+    ``starts`` must be sorted ascending; range i covers
+    [starts[i], starts[i] + lengths[i]).  Returns the translated
+    address ``targets[i] + (addr - starts[i])`` per addr, or -1 when no
+    range covers it.  This is the production-shaped lookup
+    (np.searchsorted == the binary search); the linear oracle below is
+    what the hypothesis test pins it against.
+    """
+    starts = np.asarray(starts, np.int64)
+    lengths = np.asarray(lengths, np.int64)
+    targets = np.asarray(targets, np.int64)
+    addrs = np.asarray(addrs, np.int64)
+    idx = np.searchsorted(starts, addrs, side="right") - 1
+    safe = np.maximum(idx, 0)
+    inside = ((idx >= 0)
+              & (addrs < starts[safe] + lengths[safe]))
+    return np.where(inside, targets[safe] + (addrs - starts[safe]),
+                    np.int64(-1))
+
+
+def range_table_lookup_linear(starts: np.ndarray, lengths: np.ndarray,
+                              targets: np.ndarray, addrs: np.ndarray
+                              ) -> np.ndarray:
+    """Linear-scan oracle for ``range_table_lookup`` (O(ranges) per
+    addr; correctness reference only)."""
+    starts = np.asarray(starts, np.int64)
+    lengths = np.asarray(lengths, np.int64)
+    targets = np.asarray(targets, np.int64)
+    out = np.full(len(np.atleast_1d(addrs)), -1, np.int64)
+    for j, a in enumerate(np.atleast_1d(np.asarray(addrs, np.int64))):
+        for i in range(len(starts)):
+            if starts[i] <= a < starts[i] + lengths[i]:
+                out[j] = targets[i] + (a - starts[i])
+                break
+    return out
+
+
 # ---------------------------------------------------------------------------
 # occupancy analysis (paper Fig. 8): computed from the VPN working set
 # ---------------------------------------------------------------------------
@@ -143,4 +271,6 @@ WALKS = {
     "ndpage_pl3": ndpage_pl3_walk_lines,
     "hugepage": hugepage_walk_lines,
     "ech": ech_probe_lines,
+    "inverted": inverted_hash_lines,
+    "range": range_walk_lines,
 }

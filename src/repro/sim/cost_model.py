@@ -61,7 +61,7 @@ from repro.sim import mechanisms as MS
 from repro.util import resilience
 
 #: part of the memo key: bump on any change to the derivation above
-_COST_MODEL_VERSION = 1
+_COST_MODEL_VERSION = 2
 
 _FACTORIES = {"ndp": ndp_machine, "cpu": cpu_machine}
 
@@ -69,16 +69,21 @@ _FACTORIES = {"ndp": ndp_machine, "cpu": cpu_machine}
 ORG_FLAT = "flat"      # one contiguous row: adjacent leaves share lines
 ORG_RADIX = "radix"    # per-node allocations: directory + leaf lines
 ORG_NONE = "none"      # no translation structure at all (ideal)
+ORG_SEG = "segment"    # range descriptors: lines ~ contiguous runs
+ORG_INV = "inverted"   # hashed buckets: every entry its own line
 
 
 def serving_org(name: str) -> str:
     """Which block-table organization mechanism ``name`` maps to on the
-    serving side, straight from the declarative spec registry:
-    ``flattened`` mechanisms (the NDPage family — with or without the
-    L1 bypass) read the single flat row; everything else that walks
-    reads a tree of independently-allocated nodes; ``ideal`` reads
-    nothing."""
+    serving side, straight from the declarative spec registry: an
+    explicit ``spec.org`` override wins (the zoo's segment/inverted
+    organizations); otherwise ``flattened`` mechanisms (the NDPage
+    family — with or without the L1 bypass) read the single flat row,
+    everything else that walks reads a tree of independently-allocated
+    nodes, and ``ideal`` reads nothing."""
     spec = MS.get(name)
+    if spec.org is not None:
+        return spec.org
     if spec.ideal:
         return ORG_NONE
     if spec.flattened:
@@ -125,22 +130,40 @@ class TranslationCostModel:
                 np.array([c.pte_line for c in self.costs]),
                 np.array([c.org for c in self.costs]))
 
+    @functools.cached_property
+    def needs_zoo_lines(self) -> bool:
+        """True when any mechanism uses the segment/inverted accounting
+        — lets the meter hot path skip those counts otherwise."""
+        return any(c.org in (ORG_SEG, ORG_INV) for c in self.costs)
+
     # -- vectorized accounting ----------------------------------------------
     def lookup_cycles(self, hit: np.ndarray, lines_flat: np.ndarray,
-                      lines_radix: np.ndarray) -> np.ndarray:
+                      lines_radix: np.ndarray,
+                      lines_seg: np.ndarray | None = None,
+                      lines_inv: np.ndarray | None = None) -> np.ndarray:
         """Translation cycles for N lookups under every mechanism.
 
         ``hit``: (N,) bool — the serving TranslationCache hit;
-        ``lines_flat``/``lines_radix``: (N,) touched-PTE-line counts of
-        the rebuilt row under each organization (from
-        ``block_table.translate_all_costed``).  Returns (N, M) float64.
+        ``lines_flat``/``lines_radix`` (and, for models carrying
+        segment/inverted-org mechanisms, ``lines_seg``/``lines_inv``):
+        (N,) touched-PTE-line counts of the rebuilt row under each
+        organization (from ``block_table.translate_all_costed`` /
+        ``count_pte_lines``).  An omitted zoo count defaults to 1 line
+        (no extra-line cost).  Returns (N, M) float64.
         """
         hit = np.asarray(hit, bool)[:, None]
         lf = np.asarray(lines_flat, np.float64)[:, None]
         lr = np.asarray(lines_radix, np.float64)[:, None]
+        one = np.ones_like(lf)
+        ls = (one if lines_seg is None
+              else np.asarray(lines_seg, np.float64)[:, None])
+        li = (one if lines_inv is None
+              else np.asarray(lines_inv, np.float64)[:, None])
         tlb, walk, line, org = self._vectors
-        lines = np.where(org == ORG_FLAT, lf,
-                         np.where(org == ORG_RADIX, lr, 1.0))
+        lines = np.select(
+            [org == ORG_FLAT, org == ORG_RADIX, org == ORG_SEG,
+             org == ORG_INV],
+            [lf, lr, ls, li], default=one)
         miss = walk + line * np.maximum(lines - 1.0, 0.0)
         return np.where(hit, tlb[None], miss)
 
@@ -275,9 +298,10 @@ def _engine_digest(mechs: Tuple[str, ...]) -> str:
     for s in MS.specs_for(mechs):
         h.update(repr((s.name, s.n_pte, s.parallel, s.bypass_l1,
                        s.pwc_levels, s.huge, s.flattened, s.ideal,
+                       s.cache_tlb, s.segment, s.colocate, s.org,
                        getattr(s.walk_fn, "__qualname__", None))
                       ).encode())
-    for mod in (_sim, _pt, _gen):
+    for mod in (_sim, _pt, _gen, MS):
         with open(mod.__file__, "rb") as f:
             h.update(f.read())
     return h.hexdigest()
@@ -410,11 +434,16 @@ class TranslationMeter:
         flat = np.asarray(flat_rows, np.int32)
         lf = np.ones(n, np.int64)
         lr = np.ones(n, np.int64)
+        lseg = np.ones(n, np.int64)
+        linv = np.ones(n, np.int64)
         miss = np.flatnonzero(~hit)
         if miss.size:
             ls = _usable_leaf_size(flat.shape[1], leaf_size)
             lf[miss], lr[miss] = _np_row_lines(flat[miss], ls)
-        per_seq = self.model.lookup_cycles(hit, lf, lr)
+            if self.model.needs_zoo_lines:
+                lseg[miss] = _np_seg_lines(flat[miss])
+                linv[miss] = _np_inv_lines(flat[miss])
+        per_seq = self.model.lookup_cycles(hit, lf, lr, lseg, linv)
         for i, sid in enumerate(seq_ids):
             if sid in self.per_request:
                 self.per_request[sid] = self.per_request[sid] + per_seq[i]
@@ -506,6 +535,28 @@ def _np_row_lines(flat: np.ndarray, leaf_size: int
     dir_valid = leaves.any(-1)                        # (N, n_dir)
     lr = _np_group_lines(dir_valid) + _np_group_lines(leaves).sum(-1)
     return lf, lr
+
+
+def _np_seg_lines(flat: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``block_table.count_segment_lines`` (pinned equal
+    by tests): descriptor lines for the SEGMENT org — one range per
+    maximal physically-contiguous mapped run, RANGES_PER_LINE per
+    line."""
+    from repro.core.block_table import RANGES_PER_LINE
+    flat = np.asarray(flat, np.int64)
+    mapped = flat >= 0
+    nd = flat.ndim
+    pad_cfg = [(0, 0)] * (nd - 1) + [(1, 0)]
+    prev_m = np.pad(mapped[..., :-1], pad_cfg, constant_values=False)
+    prev_p = np.pad(flat[..., :-1], pad_cfg, constant_values=-2)
+    runs = (mapped & (~prev_m | (flat != prev_p + 1))).sum(-1)
+    return (runs + RANGES_PER_LINE - 1) // RANGES_PER_LINE
+
+
+def _np_inv_lines(flat: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``block_table.count_inverted_lines``: every mapped
+    entry hashes to its own bucket line — no sharing, ever."""
+    return (np.asarray(flat, np.int64) >= 0).sum(-1)
 
 
 def _main() -> int:                     # pragma: no cover - dev utility

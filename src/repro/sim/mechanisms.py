@@ -64,6 +64,23 @@ class MechanismSpec:
     flattened: bool = False
     #: translation is free (no TLB, no walk) — the paper's upper bound
     ideal: bool = False
+    #: probes a cache-as-TLB level (Victima): on a machine with
+    #: ``ctlb_kb > 0`` the mechanism checks the repurposed-cache TLB
+    #: after an L2-TLB miss before walking; ignored when the machine
+    #: has no ctlb (degrades exactly to the underlying walk)
+    cache_tlb: bool = False
+    #: direct-segment fast path (Picorel): accesses inside the
+    #: contiguous segment (the non-fragmented share of the footprint)
+    #: translate by base/limit registers — no TLB lookup, no walk; only
+    #: the fragmentation-broken remainder takes the walk below
+    segment: bool = False
+    #: co-location-aware vpn->frame placement (CODA): on a machine with
+    #: ``num_stacks > 1`` this mechanism's memory accesses mostly land
+    #: in the LOCAL stack and dodge the remote-stack hop penalty
+    colocate: bool = False
+    #: serving cost-model organization override ("segment"/"inverted");
+    #: None derives flat/radix/none from flattened/ideal as before
+    org: Optional[str] = None
     #: VPN -> (T, n_pte) PTE line ids; None only when n_pte == 0
     walk_fn: Optional[Callable] = None
     description: str = ""
@@ -78,6 +95,12 @@ class MechanismSpec:
             raise ValueError(f"{self.name}: walking mechanisms need walk_fn")
         if any(self.pwc_levels[self.n_pte:]):
             raise ValueError(f"{self.name}: PWC beyond walk depth")
+        if self.huge and self.segment:
+            raise ValueError(f"{self.name}: huge and segment both claim "
+                             "the fragmentation mask — pick one")
+        if self.org not in (None, "flat", "radix", "segment", "inverted",
+                            "none"):
+            raise ValueError(f"{self.name}: unknown org {self.org!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +115,9 @@ class MechTables:
     pwc_on: np.ndarray       # (M, MAX_PTE) bool
     huge: np.ndarray         # (M,)   bool
     ideal: np.ndarray        # (M,)   bool
+    cache_tlb: np.ndarray    # (M,)   bool
+    segment: np.ndarray      # (M,)   bool
+    colocate: np.ndarray     # (M,)   bool
 
     @property
     def num_mechs(self) -> int:
@@ -108,9 +134,47 @@ def on_register(hook) -> None:
     _INVALIDATE_HOOKS.append(hook)
 
 
+def _validate_walk_fn(spec: MechanismSpec) -> None:
+    """Registration-time walk-fn/flag consistency checks.
+
+    Two latent hazards guarded here:
+
+    * a walk fn whose output width disagrees with ``n_pte`` would be
+      silently padded/truncated by the engine — probe it on a tiny vpn
+      array and reject the mismatch loudly;
+    * sweep bucketing, per-bucket stats and every engine digest identify
+      walk fns by ``__qualname__``.  Sharing one walk *function object*
+      across specs is a feature (one compiled bucket — ndpage /
+      ndpage_nobyp), but a DIFFERENT function that merely shares the
+      qualname (two lambdas, same-named fns from different modules)
+      would silently collide in bucketing and cache keys — reject it.
+    """
+    if spec.walk_fn is None:
+        return
+    qn = getattr(spec.walk_fn, "__qualname__", repr(spec.walk_fn))
+    for other in _REGISTRY.values():
+        if other.name == spec.name or other.walk_fn is None:
+            continue
+        oqn = getattr(other.walk_fn, "__qualname__", repr(other.walk_fn))
+        if other.walk_fn is not spec.walk_fn and oqn == qn:
+            raise ValueError(
+                f"{spec.name}: walk_fn __qualname__ {qn!r} collides with "
+                f"mechanism {other.name!r}'s distinct walk fn — sweep "
+                "bucketing and cache digests key on qualnames; rename "
+                "the function (or share the same function object)")
+    probe = np.asarray(spec.walk_fn(np.zeros(2, np.int32)))
+    if probe.shape != (2, spec.n_pte):
+        raise ValueError(
+            f"{spec.name}: walk_fn returns shape {probe.shape} for a "
+            f"(2,) vpn array but n_pte={spec.n_pte} expects "
+            f"(2, {spec.n_pte}) — the engine would silently "
+            "pad/truncate the walk")
+
+
 def register(spec: MechanismSpec, *, overwrite: bool = False) -> MechanismSpec:
     if spec.name in _REGISTRY and not overwrite:
         raise ValueError(f"mechanism {spec.name!r} already registered")
+    _validate_walk_fn(spec)
     _REGISTRY[spec.name] = spec
     tables_for.cache_clear()
     for hook in _INVALIDATE_HOOKS:
@@ -145,6 +209,9 @@ def tables_for(names: Tuple[str, ...]) -> MechTables:
         pwc_on=np.array([s.pwc_levels for s in specs], bool),
         huge=np.array([s.huge for s in specs], bool),
         ideal=np.array([s.ideal for s in specs], bool),
+        cache_tlb=np.array([s.cache_tlb for s in specs], bool),
+        segment=np.array([s.segment for s in specs], bool),
+        colocate=np.array([s.colocate for s in specs], bool),
     )
 
 
@@ -267,6 +334,50 @@ register(MechanismSpec(
     description="search winner (space 'default', seed 20250808): "
                 "paper geometry + flattened-PL3 walk; dominates the "
                 "paper's NDPage config on speedup/SRAM/worst-PTW"))
+
+# ---------------------------------------------------------------------------
+# the related-work mechanism zoo (ROADMAP item; docs/zoo.md)
+# ---------------------------------------------------------------------------
+# Four translation designs the related work actually proposes, each one
+# spec + one walk fn.  They need zoo machine knobs to differ from their
+# baselines (ctlb_kb for victima, num_stacks for coda — see
+# configs.ndp_sim.zoo_machine); on a default machine each degrades to
+# its underlying structure by construction.
+register(MechanismSpec(
+    name="victima", n_pte=4, pwc_levels=(True, True, True, True),
+    cache_tlb=True, walk_fn=PT.radix4_walk_lines,
+    description="Victima (Kanellopoulos et al., 2310.04158): L2-cache "
+                "lines repurposed as a second large set-associative TLB "
+                "level probed after an L2-TLB miss; geometry derives "
+                "from the repurposed capacity (ctlb_kb = the demotion/"
+                "promotion occupancy knob), x86 radix walk underneath"))
+
+register(MechanismSpec(
+    name="picorel", n_pte=1, bypass_l1=True, segment=True,
+    org="inverted", walk_fn=PT.inverted_hash_lines,
+    description="Picorel et al. (1612.00445) near-memory translation: "
+                "direct-segment fast path for the contiguous footprint, "
+                "one set-associative inverted-hash bucket access for "
+                "the fragmentation-broken rest — no radix levels at all"))
+
+register(MechanismSpec(
+    name="coda", n_pte=4, pwc_levels=(True, True, True, True),
+    colocate=True, walk_fn=PT.radix4_walk_lines,
+    description="CODA-style co-location-aware mapping: stock radix "
+                "hardware, but vpn->frame placement biases PTEs and "
+                "data into the LOCAL NDP stack, dodging the remote-"
+                "stack hop penalty on multi-stack machines"))
+
+register(MechanismSpec(
+    name="range_table", n_pte=4, pwc_levels=(True, True, False, False),
+    org="segment", walk_fn=PT.range_walk_lines,
+    description="range/segment-table translation (binary-search "
+                "AddrTrans idiom): log2(ranges) probes over sorted "
+                "range descriptors; the early probes stay cached, so "
+                "miss cost scales with extent fragmentation, not depth"))
+
+#: the four related-work designs, in zoo-report order
+ZOO_MECHS: Tuple[str, ...] = ("victima", "picorel", "coda", "range_table")
 
 #: the paper's evaluation set, in figure order — the simulator default
 DEFAULT_MECHS: Tuple[str, ...] = ("radix", "ech", "hugepage", "ndpage",

@@ -116,6 +116,13 @@ PAPER_DEFAULTS: "OrderedDict[str, object]" = OrderedDict([
     ("flatten", "pl2"),
     ("l1_bypass", True),
     ("huge", False),
+    # direct mechanism pick (the zoo space); "ndpage" = defer to the
+    # structural triple above
+    ("zoo_mech", "ndpage"),
+    # zoo machine knobs: the paper machine carves no cache into a
+    # cache-as-TLB and models a single memory stack
+    ("ctlb_kb", 0),
+    ("num_stacks", 1),
 ])
 
 #: named objectives with their optimization direction
@@ -202,8 +209,13 @@ def _knob(space: SearchSpace, genome: Tuple, name: str):
 
 
 def mech_for(space: SearchSpace, genome: Tuple) -> str:
-    """The registered mechanism variant this genome's structural triple
-    selects."""
+    """The registered mechanism variant this genome selects: an explicit
+    ``zoo_mech`` knob wins outright (zoo spaces search over whole
+    designs, not NDPage structure); ``"ndpage"`` or an absent knob
+    defers to the structural triple."""
+    zoo = _knob(space, genome, "zoo_mech")
+    if zoo != "ndpage":
+        return str(zoo)
     struct = (_knob(space, genome, "flatten"),
               bool(_knob(space, genome, "l1_bypass")),
               bool(_knob(space, genome, "huge")))
@@ -215,7 +227,7 @@ def build_machine(space: SearchSpace, genome: Tuple) -> MachineConfig:
     geometry knob applied."""
     mach = ndp_machine(space.cores)
     for name, value in genome_dict(space, genome).items():
-        if name in STRUCT_KNOBS:
+        if name in STRUCT_KNOBS or name == "zoo_mech":
             continue
         if name == "l1_dtlb":
             entries, ways = value
@@ -450,14 +462,22 @@ def _engine_digest(space: SearchSpace) -> str:
     h.update(str(_SEARCH_VERSION).encode())
     # sys.modules, not attribute access: repro.sim's __init__ shadows
     # the sweep submodule with the sweep() function
+    # mechanisms.py is hashed WHOLESALE: a zoo space's ``zoo_mech`` knob
+    # can reach any registered spec, so per-spec hashing can't cover it
     for name in ("repro.sim.simulator", "repro.sim.sweep",
-                 "repro.core.page_table", "repro.workloads.generators"):
+                 "repro.core.page_table", "repro.workloads.generators",
+                 "repro.sim.mechanisms"):
         with open(sys.modules[name].__file__, "rb") as f:
             h.update(f.read())
-    for name in ("radix",) + tuple(sorted(MECH_BY_STRUCT.values())):
+    reachable = set(MECH_BY_STRUCT.values())
+    for kn, values in space.knobs:
+        if kn == "zoo_mech":
+            reachable.update(str(v) for v in values if v != "ndpage")
+    for name in ("radix",) + tuple(sorted(reachable)):
         s = MS.get(name)
         h.update(repr((s.name, s.n_pte, s.parallel, s.bypass_l1,
                        s.pwc_levels, s.huge, s.flattened, s.ideal,
+                       s.cache_tlb, s.segment, s.colocate, s.org,
                        getattr(s.walk_fn, "__qualname__", None))).encode())
     for wl in space.workloads:
         if wl.startswith("trace:"):

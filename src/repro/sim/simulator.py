@@ -228,6 +228,14 @@ def _table_shapes(mach: MachineConfig) -> Dict[str, Tuple[int, int]]:
         shapes["l2"] = (mach.l2.num_sets, mach.l2.ways)
     if mach.l3 is not None:
         shapes["l3"] = (mach.l3.num_sets, mach.l3.ways)
+    if mach.ctlb_kb > 0:
+        # Victima cache-as-TLB: ctlb_kb KB of repurposed cache capacity,
+        # one translation per 64B line -> entries = capacity / line.
+        # Structurally ABSENT at ctlb_kb=0, so default machines keep
+        # their exact compiled graphs (and bit-exact results).
+        entries = mach.ctlb_kb * 1024 // 64
+        shapes["ctlb"] = (max(entries // mach.ctlb_ways, 1),
+                          mach.ctlb_ways)
     return shapes
 
 
@@ -280,6 +288,12 @@ def _data_params(mach: MachineConfig) -> Dict[str, np.float32]:
         "promo": (HP_STALL_BASE
                   + HP_STALL_PER_CORE * max(mach.num_cores - 1, 0)),
         "ech_rehash": ECH_REHASH_QUAD * max(mach.num_cores - 2, 0) ** 2,
+        "ctlb_lat": mach.ctlb_latency,
+        # multi-stack NDP memory: the expected extra hop cost of a
+        # memory access, (remote fraction) x (hop cycles).  Exactly 0.0
+        # at num_stacks=1, keeping single-stack machines bit-exact.
+        "stack_pen": ((1.0 - 1.0 / mach.num_stacks)
+                      * mach.stack_hop_cycles),
     }.items()}
 
 
@@ -290,7 +304,9 @@ def _mech_arrays(names: Tuple[str, ...]) -> Dict[str, np.ndarray]:
     walk-line FUNCTIONS (:func:`_walk_fns`) stay static."""
     t = tables_for(names)
     return {"n_pte": t.n_pte, "parallel": t.parallel, "bypass": t.bypass,
-            "pwc_on": t.pwc_on, "huge": t.huge, "ideal": t.ideal}
+            "pwc_on": t.pwc_on, "huge": t.huge, "ideal": t.ideal,
+            "cache_tlb": t.cache_tlb, "segment": t.segment,
+            "colocate": t.colocate}
 
 
 def _walk_fns(names: Tuple[str, ...]) -> Tuple:
@@ -363,16 +379,22 @@ def _build_model(shape: MachineShape, batched: bool = False):
     and mechanism variants."""
     hier = shape.hier
     shapes = _shape_tables(shape)
+    has_ctlb = "ctlb" in shapes
 
     # hit-bit layout of the packed per-entry int32
     #   0: l1tlb  1: l2tlb  2..5: pwc level  6+5*h..10+5*h: hierarchy
-    #   level h hits for [pte0..pte3, data]
-    n_bits = 6 + 5 * len(hier)
+    #   level h hits for [pte0..pte3, data]; when the machine HAS a
+    #   cache-as-TLB its hit bit is APPENDED after everything else so
+    #   pre-existing bit indices (and values) never move
+    n_bits = 6 + 5 * len(hier) + (1 if has_ctlb else 0)
+    ctlb_bit = 6 + 5 * len(hier)
     assert n_bits <= 31
 
     # LRU stamp slots: every access site gets a fixed offset so one scalar
-    # stamp per (mech, core) serves all tables with program-order ties
-    n_slots = 2 + MAX_PTE + 5 * len(hier)
+    # stamp per (mech, core) serves all tables with program-order ties;
+    # the ctlb slot is likewise appended at the end
+    n_slots = 2 + MAX_PTE + 5 * len(hier) + (1 if has_ctlb else 0)
+    ctlb_slot = 2 + MAX_PTE + 5 * len(hier)
 
     def access(tab, sets, key, en, stamp, *, set_override=None):
         """One scalar LRU lookup+fill.  Scalar set index keeps XLA on the
@@ -406,13 +428,25 @@ def _build_model(shape: MachineShape, batched: bool = False):
 
         tlb_key = jnp.where(huge & ~is4k,
                             (vpn >> HUGE_SHIFT) | (1 << 26), vpn)
-        en0 = valid & ~ideal
+        # direct-segment mechanisms translate in-segment accesses (the
+        # non-fragmented share, ~is4k) via base/limit registers: no TLB
+        # lookup, no walk — only the fragmentation-broken rest enters
+        # the translation machinery below
+        en0 = valid & ~ideal & ~(mt["segment"] & ~is4k)
         sub["l1tlb"], h_l1tlb = access(sub["l1tlb"], shapes["l1tlb"],
                                        tlb_key, en0, stamp)
         en1 = en0 & ~h_l1tlb
         sub["l2tlb"], h_l2tlb = access(sub["l2tlb"], shapes["l2tlb"],
                                        tlb_key, en1, stamp + 1)
         walk = en1 & ~h_l2tlb
+        if has_ctlb:
+            # cache-as-TLB probe after an L2-TLB miss: a hit short-
+            # circuits the walk for cache_tlb mechanisms
+            en_ct = walk & mt["cache_tlb"]
+            sub["ctlb"], h_ctlb = access(sub["ctlb"], shapes["ctlb"],
+                                         tlb_key, en_ct,
+                                         stamp + ctlb_slot)
+            walk = walk & ~h_ctlb
 
         # hugepage 4KB-fallback regions walk like radix (4 levels)
         eff_n = jnp.where(huge & is4k, MAX_PTE, mt["n_pte"])
@@ -441,6 +475,8 @@ def _build_model(shape: MachineShape, batched: bool = False):
                 bits.append(h)
             ens = nxt
 
+        if has_ctlb:
+            bits.append(h_ctlb)          # appended: old bit indices keep
         packed = (jnp.stack(bits)
                   * (1 << jnp.arange(n_bits, dtype=jnp.int32))).sum()
         return sub, stamp + n_slots, packed
@@ -503,10 +539,20 @@ def _build_model(shape: MachineShape, batched: bool = False):
         qb = q[None, :, None] if q.ndim == 1 else q[None]   # (1, M, 1|C)
         mem4 = d4(dp["mem_lat"])
         hier_lat = [dp["l1_lat"], dp["l2_lat"], dp["l3_lat"]][:len(hier)]
+        # multi-stack remote-hop penalty per memory access: co-locating
+        # mechanisms place frames in the local stack and dodge ~90% of
+        # it.  stack_pen is 0.0 on single-stack machines, so this is an
+        # exact +0.0 there (bit-stable vs the pre-zoo engine).
+        pen = d3(dp["stack_pen"]) * jnp.where(mb(mt["colocate"]),
+                                              0.1, 1.0)
+        pen4 = pen[..., None]
 
         h_l1tlb, h_l2tlb = bit(0), bit(1)
-        en0 = validb & ~idealb
+        en0 = validb & ~idealb & ~(mb(mt["segment"]) & ~is4kb)
         walk = en0 & ~h_l1tlb & ~h_l2tlb                    # (T, M, C)
+        if has_ctlb:
+            ctlb_probe = walk & mb(mt["cache_tlb"])
+            walk = walk & ~bit(ctlb_bit)
         eff_n = jnp.where(hugeb & is4kb, MAX_PTE, mb(mt["n_pte"]))
 
         # hierarchy latency per line (pte0..3, data): chain the per-level
@@ -519,7 +565,7 @@ def _build_model(shape: MachineShape, batched: bool = False):
             lat = lat + jnp.where(reached, d4(hier_lat[h_i]), 0.0)
             went_mem = went_mem & ~h
             reached = reached & ~h
-        lat = lat + jnp.where(reached, mem4 + qb[..., None], 0.0)
+        lat = lat + jnp.where(reached, mem4 + qb[..., None] + pen4, 0.0)
 
         # per-PTE-level walk latency: PWC hit beats everything; NDPage
         # bypass goes straight to memory; cached mechanisms pay the chain
@@ -527,7 +573,8 @@ def _build_model(shape: MachineShape, batched: bool = False):
         pte_en = (walk[..., None]
                   & (jnp.arange(MAX_PTE) < eff_n[..., None]))
         need_mem = pte_en & ~pwc_hit
-        pte_lat = jnp.where(bypb[..., None], mem4 + qb[..., None],
+        pte_lat = jnp.where(bypb[..., None],
+                            mem4 + qb[..., None] + pen4,
                             lat[..., :MAX_PTE])
         pte_lat = jnp.where(pwc_hit, d4(dp["pwc_lat"]), pte_lat)
         pte_lat = jnp.where(pte_en, pte_lat, 0.0)
@@ -542,6 +589,11 @@ def _build_model(shape: MachineShape, batched: bool = False):
                              pte_lat.sum(-1))
 
         trans = jnp.where(walk, walk_cyc, 0.0)
+        if has_ctlb:
+            # the cache-as-TLB probe is serial after the L2-TLB miss:
+            # paid on hit AND miss; a hit replaces the walk entirely
+            trans = trans + jnp.where(ctlb_probe, d3(dp["ctlb_lat"]),
+                                      0.0)
         trans = jnp.where(en0 & ~h_l1tlb, d3(dp["l2tlb_lat"]) + trans, 0.0)
         trans = trans + jnp.where(hugeb & validb, d3(dp["promo"]), 0.0)
 

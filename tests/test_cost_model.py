@@ -75,11 +75,19 @@ class TestCostModel:
         assert m.cost("ideal").walk == 0.0
 
     def test_serving_org_covers_registry(self):
+        from repro.sim.cost_model import ORG_INV, ORG_SEG
         from repro.sim.mechanisms import registered_names
         for name in registered_names():
-            assert serving_org(name) in (ORG_FLAT, ORG_RADIX, ORG_NONE)
+            assert serving_org(name) in (ORG_FLAT, ORG_RADIX, ORG_NONE,
+                                         ORG_SEG, ORG_INV)
         assert serving_org("ndpage_pl3") == ORG_FLAT
         assert serving_org("ech") == ORG_RADIX
+        # zoo: explicit spec.org overrides win; walkers without one
+        # default to the radix tree
+        assert serving_org("picorel") == ORG_INV
+        assert serving_org("range_table") == ORG_SEG
+        assert serving_org("victima") == ORG_RADIX
+        assert serving_org("coda") == ORG_RADIX
 
     def test_lookup_cycles_shape_and_hit_cost(self):
         m = TranslationCostModel.pinned()
@@ -302,3 +310,83 @@ class TestCostedServing:
                 BT.radix_from_flat(jnp.asarray(flat), ls), BT.RADIX))
             np.testing.assert_array_equal(lf, want_lf)
             np.testing.assert_array_equal(lr, want_lr)
+
+
+# ---------------------------------------------------------------------------
+# zoo organizations: segment/inverted line accounting
+# ---------------------------------------------------------------------------
+class TestZooOrgs:
+    """Segment (range-descriptor) and inverted (hashed-bucket) PTE-line
+    accounting: numpy meter fast path == canonical jnp helpers, and
+    lookup_cycles prices each org from ITS line count."""
+
+    CASES = {
+        # one contiguous run -> 1 descriptor -> 1 line; inverted pays
+        # a bucket line per mapped page
+        "contiguous": [0, 1, 2, 3, 4, 5, 6, 7],
+        # fully fragmented: every page its own run
+        "fragmented": [10, 20, 30, 40, 50, 60, 70, 80],
+        # holes split runs; unmapped entries count nowhere
+        "holes": [0, 1, -1, 3, 4, -1, -1, 9],
+        "empty": [-1] * 8,
+        # runs across a hole do NOT merge even when phys is consecutive
+        "hole_splits_run": [0, 1, -1, 2, 3, -1, 4, -1],
+    }
+
+    def test_numpy_twins_match_block_table(self):
+        from repro.sim.cost_model import _np_inv_lines, _np_seg_lines
+        flat = np.array(list(self.CASES.values()), np.int32)
+        np.testing.assert_array_equal(
+            _np_seg_lines(flat),
+            np.asarray(BT.count_pte_lines(jnp.asarray(flat),
+                                          BT.SEGMENT)))
+        np.testing.assert_array_equal(
+            _np_inv_lines(flat),
+            np.asarray(BT.count_pte_lines(jnp.asarray(flat),
+                                          BT.INVERTED)))
+
+    def test_segment_counts_runs_not_pages(self):
+        from repro.sim.cost_model import _np_seg_lines
+        flat = np.array([self.CASES["contiguous"],
+                         self.CASES["fragmented"],
+                         self.CASES["holes"],
+                         self.CASES["empty"]], np.int32)
+        # 1 run -> 1 line; 8 runs -> ceil(8/4)=2 lines; 3 runs -> 1
+        # line; no runs -> 0 lines
+        np.testing.assert_array_equal(_np_seg_lines(flat), [1, 2, 1, 0])
+
+    def test_inverted_counts_mapped_pages(self):
+        from repro.sim.cost_model import _np_inv_lines
+        flat = np.array([self.CASES["contiguous"],
+                         self.CASES["holes"],
+                         self.CASES["empty"]], np.int32)
+        np.testing.assert_array_equal(_np_inv_lines(flat), [8, 5, 0])
+
+    def test_lookup_cycles_prices_each_org_from_its_count(self):
+        from repro.sim.cost_model import (ORG_INV, ORG_SEG, LookupCost,
+                                          TranslationCostModel)
+        m = TranslationCostModel(
+            mechs=("seg", "inv", "flat"),
+            costs=(LookupCost(1.0, 10.0, 2.0, ORG_SEG),
+                   LookupCost(1.0, 10.0, 2.0, ORG_INV),
+                   LookupCost(1.0, 10.0, 2.0, ORG_FLAT)),
+            machine="test", freq_ghz=1.0,
+            model_cycles_per_token=100.0, source="pinned")
+        assert m.needs_zoo_lines
+        hit = np.array([False, False])
+        out = m.lookup_cycles(hit, np.array([3, 3]), np.array([5, 5]),
+                              lines_seg=np.array([1, 4]),
+                              lines_inv=np.array([8, 2]))
+        # seg: walk + line*(seg_lines-1); inv likewise; flat from flat
+        np.testing.assert_allclose(out[:, 0], [10.0, 10.0 + 2.0 * 3])
+        np.testing.assert_allclose(out[:, 1], [10.0 + 2.0 * 7,
+                                               10.0 + 2.0 * 1])
+        np.testing.assert_allclose(out[:, 2], [10.0 + 2.0 * 2] * 2)
+        # omitted zoo counts default to one line (no extra-line cost)
+        out2 = m.lookup_cycles(hit, np.array([3, 3]), np.array([5, 5]))
+        np.testing.assert_allclose(out2[:, 0], [10.0, 10.0])
+        np.testing.assert_allclose(out2[:, 1], [10.0, 10.0])
+
+    def test_paper_model_skips_zoo_accounting(self):
+        m = TranslationCostModel.pinned()
+        assert not m.needs_zoo_lines

@@ -162,3 +162,58 @@ def test_pareto_frontier_membership_iff_nondominated(vals):
         dominated = any(dominates(w, v)
                         for j, w in enumerate(vecs) if j != i)
         assert (i in front) == (not dominated)
+
+
+# ---------------------------------------------------------------------------
+# zoo translation structures: range-table binary search & inverted hash
+# ---------------------------------------------------------------------------
+@SET
+@given(spans=st.lists(st.tuples(st.integers(1, 50),      # range length
+                                st.integers(0, 30)),     # gap after it
+                      min_size=1, max_size=20),
+       targets=st.lists(st.integers(0, 10**6), min_size=20,
+                        max_size=20),
+       probes=st.lists(st.integers(-10, 2000), min_size=1,
+                       max_size=40),
+       base=st.integers(0, 1000))
+def test_range_table_binary_search_matches_linear_oracle(
+        spans, targets, probes, base):
+    """The searchsorted lookup (the production range-walk shape) and
+    the O(ranges) linear scan agree on EVERY address — inside a range,
+    in a gap, before the first, after the last."""
+    from repro.core.page_table import (range_table_lookup,
+                                       range_table_lookup_linear)
+    starts, lengths = [], []
+    pos = base
+    for length, gap in spans:
+        starts.append(pos)
+        lengths.append(length)
+        pos += length + gap + 1        # +1 keeps ranges non-overlapping
+    starts = np.asarray(starts)
+    lengths = np.asarray(lengths)
+    tgt = np.asarray(targets[:len(starts)])
+    addrs = np.asarray(probes) + base
+    fast = range_table_lookup(starts, lengths, tgt, addrs)
+    slow = range_table_lookup_linear(starts, lengths, tgt, addrs)
+    np.testing.assert_array_equal(fast, slow)
+
+
+@SET
+@given(vpns=st.lists(st.integers(0, 2**31 - 1), min_size=1,
+                     max_size=120, unique=True),
+       log2_slots=st.sampled_from([7, 8, 10]))
+def test_inverted_table_never_aliases_silently(vpns, log2_slots):
+    """Open-addressed insert invariants: no two live vpns ever share a
+    slot, and a vpn pays extra probes IFF its home slot was taken —
+    collisions are never free and never silent."""
+    from repro.core.page_table import _hash_np, inverted_table_insert
+    vpns = np.asarray(vpns, np.int64)
+    slots, probes = inverted_table_insert(vpns, log2_slots=log2_slots)
+    assert len(np.unique(slots)) == len(slots)          # no aliasing
+    homes = _hash_np(vpns) & np.uint32((1 << log2_slots) - 1)
+    displaced = slots != homes.astype(np.int64)
+    np.testing.assert_array_equal(probes > 0, displaced)
+    # linear probing: the probe count is exactly the slot displacement
+    # distance (mod table size)
+    dist = (slots - homes.astype(np.int64)) % (1 << log2_slots)
+    np.testing.assert_array_equal(probes, dist)

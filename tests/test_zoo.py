@@ -1,0 +1,241 @@
+"""Cross-mechanism differential test harness.
+
+EVERY mechanism in the registry — the paper five, the NDPage search
+family, and the related-work zoo (victima / picorel / coda /
+range_table) — runs on the same seeded smoke trace on a ctlb-enabled
+multi-stack test machine, and a shared set of invariants must hold for
+all of them:
+
+  * count partition: 0 <= walks <= l1tlb_misses <= accesses, and the
+    ideal mechanism never walks;
+  * latencies are non-negative and total cycles are MONOTONE in
+    ``mem_latency`` (a value-only change — same compiled graph);
+  * a single ``simulate`` call and lanes of one ``simulate_batch``
+    dispatch are BIT-EXACT per mechanism;
+  * a pinned per-mechanism regression table
+    (``tests/fixtures/zoo_pinned.json``) catches silent model drift.
+
+Regenerate the pinned table after an intentional model change with:
+
+  PYTHONPATH=src python tests/test_zoo.py --update
+
+Registry-fragility tests ride along: ``register()`` must reject
+duplicate names, walk fns whose output width disagrees with ``n_pte``,
+and distinct walk-fn objects that collide on ``__qualname__`` (the
+sweep-bucketing and cache-digest key) — while still allowing the
+legitimate shared-function-object idiom (ndpage / ndpage_nobyp).
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.ndp_sim import ndp_machine
+from repro.sim import mechanisms as MS
+from repro.sim import simulate
+from repro.sim.simulator import simulate_batch
+
+PINNED_PATH = os.path.join(os.path.dirname(__file__), "fixtures",
+                           "zoo_pinned.json")
+#: the harness machine: every zoo feature armed (cache-as-TLB present,
+#: multi-stack penalty nonzero) so no mechanism's model is a no-op
+ZOO_TEST_CORES = 2
+
+
+def zoo_test_machine(cores: int = ZOO_TEST_CORES):
+    return dataclasses.replace(ndp_machine(cores), ctlb_kb=64,
+                               num_stacks=4,
+                               name=f"zoo-test-{cores}c")
+
+
+@pytest.fixture(scope="module")
+def all_mechs():
+    return MS.registered_names()
+
+
+@pytest.fixture(scope="module")
+def zoo_res(smoke_trace, all_mechs):
+    return simulate(zoo_test_machine(), smoke_trace("rnd", ZOO_TEST_CORES),
+                    mechs=all_mechs, chunk=512)
+
+
+class TestDifferentialInvariants:
+    """The invariants every registered mechanism must satisfy on the
+    shared seeded trace — a new mechanism joins the registry and is
+    covered here with zero new test code."""
+
+    def test_counts_partition(self, zoo_res, all_mechs):
+        acc = zoo_res.accesses
+        for i, name in enumerate(all_mechs):
+            l1m = zoo_res.l1tlb_misses[i]
+            walks = zoo_res.walks[i]
+            assert (walks >= 0).all(), name
+            assert (l1m >= 0).all(), name
+            assert (walks <= l1m).all(), \
+                f"{name}: more walks than L1-TLB misses"
+            assert (l1m <= acc).all(), \
+                f"{name}: more L1-TLB misses than lookups"
+            if MS.get(name).ideal:
+                assert (walks == 0).all(), f"{name}: ideal never walks"
+                assert (l1m == 0).all(), f"{name}: ideal never misses"
+
+    def test_latencies_nonnegative_and_finite(self, zoo_res, all_mechs):
+        for arr in (zoo_res.cycles, zoo_res.trans_cycles,
+                    zoo_res.walk_cycles):
+            assert np.isfinite(arr).all()
+            assert (arr >= 0).all()
+        # every mechanism executes the full window: positive cycles
+        assert (zoo_res.cycles > 0).all()
+
+    def test_cycles_monotone_in_mem_latency(self, smoke_trace,
+                                            all_mechs):
+        mach = zoo_test_machine()
+        trace = smoke_trace("rnd", ZOO_TEST_CORES)
+        slow = dataclasses.replace(mach,
+                                   mem_latency=mach.mem_latency * 2,
+                                   name="zoo-test-slowmem")
+        base = simulate(mach, trace, mechs=all_mechs, chunk=512)
+        worse = simulate(slow, trace, mechs=all_mechs, chunk=512)
+        for i, name in enumerate(all_mechs):
+            assert (worse.cycles[i] >= base.cycles[i] - 1e-3).all(), \
+                f"{name}: cycles not monotone in mem_latency"
+
+    def test_single_vs_batch_bit_exact(self, smoke_trace, zoo_res,
+                                       all_mechs):
+        trace = smoke_trace("rnd", ZOO_TEST_CORES)
+        b = simulate_batch(zoo_test_machine(), [trace, trace],
+                           mechs=all_mechs, chunk=512)
+        for lane in b:
+            np.testing.assert_array_equal(zoo_res.cycles, lane.cycles)
+            np.testing.assert_array_equal(zoo_res.walks, lane.walks)
+            np.testing.assert_array_equal(zoo_res.l1tlb_misses,
+                                          lane.l1tlb_misses)
+            np.testing.assert_array_equal(zoo_res.pte_mem, lane.pte_mem)
+
+    def test_zoo_mechs_registered(self, all_mechs):
+        for name in MS.ZOO_MECHS:
+            assert name in all_mechs
+
+    def test_pinned_regression_table(self, zoo_res, all_mechs):
+        assert os.path.exists(PINNED_PATH), \
+            "no pinned zoo table — run: " \
+            "PYTHONPATH=src python tests/test_zoo.py --update"
+        with open(PINNED_PATH) as f:
+            pinned = json.load(f)
+        missing = [m for m in all_mechs if m not in pinned["mean_cycles"]]
+        assert not missing, \
+            f"mechanisms {missing} not pinned — run " \
+            "PYTHONPATH=src python tests/test_zoo.py --update"
+        got = zoo_res.cycles.mean(axis=1)
+        for i, name in enumerate(all_mechs):
+            np.testing.assert_allclose(
+                got[i], pinned["mean_cycles"][name], rtol=0.05,
+                err_msg=f"{name} drifted from the pinned table "
+                        "(intentional model change? --update)")
+
+
+class TestRegistryValidation:
+    """register() fragility guards (see _validate_walk_fn)."""
+
+    def _cleanup(self, *names):
+        for n in names:
+            MS._REGISTRY.pop(n, None)
+        MS.tables_for.cache_clear()
+
+    def test_duplicate_name_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            MS.register(MS.get("radix"))
+
+    def test_overwrite_flag_allows_replacement(self):
+        orig = MS.get("radix")
+        try:
+            got = MS.register(orig, overwrite=True)
+            assert got is orig
+        finally:
+            MS._REGISTRY["radix"] = orig
+            MS.tables_for.cache_clear()
+
+    def test_wrong_width_walk_fn_rejected(self):
+        import repro.core.page_table as PT
+        try:
+            with pytest.raises(ValueError, match="pad/truncate"):
+                # radix4 emits 4 lines, n_pte says 2
+                MS.register(MS.MechanismSpec(
+                    name="tmp_wrong_width", n_pte=2,
+                    pwc_levels=(True, True, False, False),
+                    walk_fn=PT.radix4_walk_lines))
+            assert "tmp_wrong_width" not in MS.registered_names()
+        finally:
+            self._cleanup("tmp_wrong_width")
+
+    def test_qualname_collision_rejected(self):
+        def make(salt):
+            def walk(vpn):                    # same __qualname__ twice
+                return np.asarray(vpn)[..., None] + salt
+            return walk
+
+        try:
+            MS.register(MS.MechanismSpec(
+                name="tmp_qn_a", n_pte=1,
+                pwc_levels=(True, False, False, False),
+                walk_fn=make(1)))
+            with pytest.raises(ValueError, match="collides"):
+                MS.register(MS.MechanismSpec(
+                    name="tmp_qn_b", n_pte=1,
+                    pwc_levels=(True, False, False, False),
+                    walk_fn=make(2)))
+            assert "tmp_qn_b" not in MS.registered_names()
+        finally:
+            self._cleanup("tmp_qn_a", "tmp_qn_b")
+
+    def test_shared_walk_fn_object_allowed(self):
+        # the legitimate idiom: one compiled bucket for spec variants
+        # sharing one function object (ndpage / ndpage_nobyp do this)
+        import repro.core.page_table as PT
+        try:
+            MS.register(MS.MechanismSpec(
+                name="tmp_shared_fn", n_pte=4,
+                pwc_levels=(True, True, True, True),
+                walk_fn=PT.radix4_walk_lines))
+            assert "tmp_shared_fn" in MS.registered_names()
+        finally:
+            self._cleanup("tmp_shared_fn")
+
+    def test_existing_family_shares_fn_objects(self):
+        # regression: the registry must keep allowing these pairs
+        assert MS.get("ndpage").walk_fn is MS.get("ndpage_nobyp").walk_fn
+        assert (MS.get("ndpage_search").walk_fn
+                is MS.get("ndpage_pl3").walk_fn)
+
+
+def _update_pinned() -> None:
+    from repro.configs.ndp_sim import PRESETS
+    from repro.workloads import generate_trace
+    names = MS.registered_names()
+    trace = generate_trace("rnd", ZOO_TEST_CORES,
+                           preset=PRESETS["smoke"])
+    res = simulate(zoo_test_machine(), trace, mechs=names, chunk=512)
+    payload = {
+        "machine": zoo_test_machine().name,
+        "workload": "rnd", "preset": "smoke",
+        "mean_cycles": {n: round(float(c), 1)
+                        for n, c in zip(names,
+                                        res.cycles.mean(axis=1))},
+    }
+    os.makedirs(os.path.dirname(PINNED_PATH), exist_ok=True)
+    with open(PINNED_PATH, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"pinned {len(names)} mechanisms -> {PINNED_PATH}")
+
+
+if __name__ == "__main__":
+    if "--update" in sys.argv:
+        _update_pinned()
+    else:
+        print(__doc__)
