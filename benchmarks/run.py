@@ -15,6 +15,10 @@ Sections (stages):
                 (benchmarks/trace_validate.py)
   * --serving:  translation-costed serving throughput per mechanism
                 (benchmarks/serving_translation.py)
+  * --serving-fleet: fleet-scale costed serving — continuous batching
+                with prefix sharing and translation-aware admission,
+                plus the model-cycles-per-token repricing sweep
+                (benchmarks/serving_fleet.py)
   * --search:   seeded design-space search + frontier-regression gate
                 (benchmarks/sim_search.py); ``--search-space`` selects
                 the space (default: the nightly ``default`` space)
@@ -99,6 +103,11 @@ def main(argv=None) -> None:
     p.add_argument("--serving", action="store_true",
                    help="also run the translation-costed serving "
                         "benchmark (benchmarks/serving_translation.py)")
+    p.add_argument("--serving-fleet", action="store_true",
+                   help="also run the fleet-scale costed serving "
+                        "benchmark — continuous batching, prefix "
+                        "sharing, translation-aware admission "
+                        "(benchmarks/serving_fleet.py)")
     p.add_argument("--search", action="store_true",
                    help="also run the seeded design-space search and "
                         "frontier-regression gate "
@@ -235,6 +244,19 @@ def main(argv=None) -> None:
         if failed:
             raise RuntimeError(f"serving ordering checks FAILED: {failed}")
 
+    def st_serving_fleet():
+        from benchmarks import serving_fleet
+        # full fleet mix + the mcpt sweep; source="sweep" so a broken
+        # cost-model derivation fails the stage (the PR lane covers the
+        # hermetic smoke variant: serving_fleet.py --smoke --pinned)
+        frows, fsummary = serving_fleet.run_fleet(fast=False,
+                                                  source="sweep")
+        _print_rows(frows)
+        serving_fleet.merge_into_bench_json(fsummary, bench_sim_path)
+        failed = serving_fleet.failed_checks(fsummary)
+        if failed:
+            raise RuntimeError(f"fleet serving gates FAILED: {failed}")
+
     def st_search():
         from benchmarks import sim_search
         srows, ssummary = sim_search.run_search(args.search_space)
@@ -262,6 +284,8 @@ def main(argv=None) -> None:
         stage("trace_validate", st_trace_validate)
     if args.serving:
         stage("serving", st_serving)
+    if args.serving_fleet:
+        stage("serving_fleet", st_serving_fleet)
     if args.search:
         stage("search", st_search)
     if args.zoo:

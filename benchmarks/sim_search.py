@@ -1,6 +1,6 @@
 """Design-space search driver + frontier-regression gate.
 
-Runs the seeded evolutionary search from :mod:`repro.sim.search` over a
+Runs the seeded evolutionary search from :mod:`repro.sim._search` over a
 named space (``repro.configs.ndp_sim.SEARCH_SPACES``), prints
 ``name,us_per_call,derived`` CSV rows like the other benchmark drivers,
 merges the ``"search"`` section into ``BENCH_sim.json`` (never
@@ -63,7 +63,7 @@ def check_frontier_baseline(result, path: str = BASELINE_PATH
     against everything the run discovered, on current-engine objective
     values.
     """
-    from repro.sim.search import (dominates, evaluate_genomes,
+    from repro.sim._search import (dominates, evaluate_genomes,
                                   genome_key)
     if not os.path.exists(path):
         return True, "no baseline pinned (run --update-baseline)"
@@ -120,8 +120,8 @@ def run_search(space: str = "default", *, seed: int | None = None,
     """Run the search + all gates.  Returns CSV rows and a summary dict
     whose ``"section"`` is the BENCH_sim.json payload and whose
     ``"checks"`` booleans feed :func:`failed_checks`."""
-    from repro.sim.search import pareto_indices
-    from repro.sim.search import search as run
+    from repro.sim._search import pareto_indices
+    from repro.sim._search import search as run
 
     result = run(space, seed=seed, use_cache=use_cache)
     p = result.provenance
@@ -177,7 +177,7 @@ def failed_checks(summary: Dict) -> List[str]:
 def merge_into_bench_json(summary: Dict, path: str) -> None:
     """Attach the search section to BENCH_sim.json without clobbering
     the figures/sweeps/real_traces/serving sections already there."""
-    from repro.sim.search import merge_search_section
+    from repro.sim._search import merge_search_section
     merge_search_section(summary["section"], path)
 
 

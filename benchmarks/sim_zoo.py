@@ -203,7 +203,7 @@ def run_zoo_serving(fast: bool, seed: int = 0) -> Tuple[List[Row], Dict]:
 def run_zoo_search() -> Tuple[List[Row], Dict]:
     """Phase 3: the ``"zoo"`` design space — mechanism membership is a
     genome knob searched jointly with ctlb/PWC sizing."""
-    from repro.sim.search import search
+    from repro.sim import search
 
     result = search("zoo")
     p = result.provenance

@@ -20,7 +20,7 @@ from repro.configs.ndp_sim import ndp_machine
 from repro.core import block_table as BT
 from repro.core.kv_page_manager import KVPageManager
 from repro.models import init_params
-from repro.serving.engine import greedy_reference
+from repro.serving import greedy_reference
 from repro.sim import simulate
 from repro.workloads import generate_trace
 

@@ -164,7 +164,7 @@ PRESETS: Dict[str, SimPreset] = {
 
 
 # ---------------------------------------------------------------------------
-# sensitivity-sweep presets (consumed by repro.sim.sweep.sweep(name))
+# sensitivity-sweep presets (consumed by repro.sim.sweep(name))
 # ---------------------------------------------------------------------------
 #: the workload subset the sensitivity figures sweep over: one per
 #: suite-level behaviour (uniform, graph, frontier, MC lookup,
@@ -249,7 +249,7 @@ SWEEPS: Dict[str, dict] = {
 
 
 # ---------------------------------------------------------------------------
-# design-space-search presets (consumed by repro.sim.search.search(name))
+# design-space-search presets (consumed by repro.sim.search(name))
 # ---------------------------------------------------------------------------
 #: the two committed real-format fixture traces, as "trace:" workload
 #: specs (paths relative to the repo root; the search layer absolutizes
@@ -262,7 +262,7 @@ SEARCH_FIXTURES: Tuple[str, ...] = (
 )
 
 #: Declarative design spaces for the automated search.  Each entry is
-#: plain data consumed by ``repro.sim.search``: ``knobs`` is an ordered
+#: plain data consumed by ``repro.sim._search``: ``knobs`` is an ordered
 #: (name, values) tuple — ``flatten``/``l1_bypass``/``huge`` select the
 #: candidate's mechanism STRUCTURE from the registry family,
 #: ``l1_dtlb`` is an (entries, ways) geometry bundle, everything else a
@@ -340,6 +340,23 @@ SERVING_COST: Dict[str, object] = dict(
     mechs=("radix", "ech", "hugepage", "ndpage", "ideal"),
     preset="smoke",
     model_cycles_per_token=1500.0,
+)
+
+#: the fleet-scale serving benchmark (benchmarks/serving_fleet.py):
+#: request-mix shape, translation-budget run, and the
+#: model-cycles-per-token grid the accumulated translation cycles are
+#: re-priced under (mapping where translation stops mattering).  The
+#: smoke variant trims counts, never structure.
+SERVING_FLEET: Dict[str, object] = dict(
+    max_batch=1024, max_len=64, page_size=8, leaf_size=4,
+    num_requests=1536,
+    prefix_groups=32, prefix_len=32,      # 32 tokens = 4 full pages
+    tail_tokens=8, new_tokens=16,
+    independent_prompt=(24, 40),          # the no-prefix control mix
+    translation_budget=6_000.0,           # cycles/step, budget run
+    budget_mech="ndpage",
+    mcpt_grid=(150.0, 500.0, 1500.0, 5000.0, 15000.0),
+    smoke=dict(max_batch=256, num_requests=384, prefix_groups=8),
 )
 
 

@@ -149,6 +149,37 @@ def count_pte_lines(table, mode: str) -> jnp.ndarray:
     raise ValueError(mode)
 
 
+def count_pte_lines_shared(flat: jnp.ndarray, leaf_size: int
+                           ) -> jnp.ndarray:
+    """RADIX-org line counts of flat rows with BATCH-GLOBAL shared-leaf
+    dedup, (B,) int32: a leaf whose physical pages are identical across
+    sequences (a prefix-shared system prompt) is one allocation the OS
+    maps into every sharer's tree, so a step that walks several sharers
+    touches its lines ONCE — charged to the first row (row-major) that
+    references it.  Directory rows stay per-sequence.
+
+    This is the radix organization's line-sharing win the flat org
+    cannot have (each flat row is its own contiguous allocation, shared
+    prefix or not).  Pairwise-comparison oracle, O((B·n_dir)²·leaf) —
+    the serving meter's numpy twin (``cost_model._np_row_lines_shared``)
+    is the hot-path implementation and is pinned equal by tests.
+    """
+    b, maxp = flat.shape
+    assert maxp % leaf_size == 0, (maxp, leaf_size)
+    n_dir = maxp // leaf_size
+    leaves = flat.reshape(b * n_dir, leaf_size)
+    mapped = leaves >= 0
+    valid = mapped.any(-1)
+    same = ((leaves[:, None, :] == leaves[None, :, :]).all(-1)
+            & valid[:, None] & valid[None, :])
+    j = jnp.arange(b * n_dir)
+    dup = (same & (j[:, None] > j[None, :])).any(-1)
+    leaf_lines = jnp.where(valid & ~dup, _lines_of(mapped), 0)
+    dir_valid = valid.reshape(b, n_dir)
+    return (_lines_of(dir_valid)
+            + leaf_lines.reshape(b, n_dir).sum(-1)).astype(jnp.int32)
+
+
 def count_segment_lines(flat: jnp.ndarray) -> jnp.ndarray:
     """SEGMENT org line count for a flat row, (...,) int32: one range
     descriptor per maximal run of *physically contiguous* mapped pages

@@ -1,2 +1,18 @@
-from repro.serving.engine import ServeEngine  # noqa: F401
-from repro.serving.scheduler import BatchScheduler, Request  # noqa: F401
+"""The serving layer's public import surface.
+
+``ServeEngine`` / ``BatchScheduler`` run the real model at small batch;
+``FleetEngine`` / ``FleetScheduler`` are the same serving design at
+fleet scale (thousands of live sequences, struct-of-arrays scheduling,
+prefix sharing, translation-aware admission).  Build requests with
+:meth:`Request.build` — it owns the runtime-bookkeeping defaults.
+
+Implementation modules are private (``_engine`` / ``_scheduler`` /
+``fleet``); the old ``repro.serving.engine`` / ``repro.serving.
+scheduler`` module paths remain as deprecation shims.
+"""
+from repro.serving._engine import (ServeEngine,  # noqa: F401
+                                   greedy_reference)
+from repro.serving._scheduler import (BatchScheduler,  # noqa: F401
+                                      Request)
+from repro.serving.fleet import (FleetEngine,  # noqa: F401
+                                 FleetScheduler)

@@ -15,10 +15,14 @@ from repro.sim.simulator import (MachineShape, SimJob,  # noqa: F401
                                  SimResult, machine_shape,
                                  runner_cache_info, simulate,
                                  simulate_batch, simulate_batch_varied)
-from repro.sim.sweep import SweepResult, run_bucketed, sweep  # noqa: F401
+from repro.sim._search import (SearchResult, SearchSpace,  # noqa: F401
+                               search)
+from repro.sim._sweep import (SweepResult, apply_param,  # noqa: F401
+                              run_bucketed, sweep)
 
-# NOTE: the design-space search layer (repro.sim.search) is deliberately
-# NOT re-exported here: it is also a ``python -m repro.sim.search`` CLI,
-# and importing it from the package __init__ would make every CLI run
-# warn about the module pre-existing in sys.modules.  Import it as
-# ``from repro.sim.search import search, SearchSpace``.
+# This facade is the ONE public import surface of the simulator layer:
+# ``from repro.sim import simulate, sweep, run_bucketed, search, ...``.
+# Implementation modules are private (``_sweep`` / ``_search``); the old
+# ``repro.sim.sweep`` / ``repro.sim.search`` module paths remain as thin
+# shims that emit a DeprecationWarning on import (``python -m
+# repro.sim.search`` still runs the CLI, warning-free).

@@ -167,15 +167,23 @@ class TranslationCostModel:
         miss = walk + line * np.maximum(lines - 1.0, 0.0)
         return np.where(hit, tlb[None], miss)
 
-    def tokens_per_sec(self, tokens: int, trans_cycles: np.ndarray
+    def tokens_per_sec(self, tokens: int, trans_cycles: np.ndarray,
+                       model_cycles_per_token: float | None = None
                        ) -> Dict[str, float]:
         """End-to-end throughput per mechanism: the model compute budget
         (``model_cycles_per_token`` x tokens) plus each mechanism's
-        accumulated translation cycles, at the machine's clock."""
+        accumulated translation cycles, at the machine's clock.
+
+        ``model_cycles_per_token`` overrides the model's own value —
+        the ``serving_fleet`` benchmark re-prices the SAME accumulated
+        translation cycles under a grid of compute budgets to map where
+        translation stops mattering, without re-running anything."""
         if tokens <= 0:
             return {m: 0.0 for m in self.mechs}
-        total = self.model_cycles_per_token * tokens + np.asarray(
-            trans_cycles, np.float64)
+        mcpt = (self.model_cycles_per_token
+                if model_cycles_per_token is None
+                else float(model_cycles_per_token))
+        total = mcpt * tokens + np.asarray(trans_cycles, np.float64)
         secs = total / (self.freq_ghz * 1e9)
         return {m: float(tokens / secs[i])
                 for i, m in enumerate(self.mechs)}
@@ -403,7 +411,8 @@ class TranslationMeter:
     STEP_HISTORY = 4096
     RETIRED_HISTORY = 4096
 
-    def __init__(self, model: TranslationCostModel):
+    def __init__(self, model: TranslationCostModel,
+                 max_slots: int | None = None):
         self.model = model
         m = len(model.mechs)
         self.total = np.zeros(m, np.float64)
@@ -418,6 +427,14 @@ class TranslationMeter:
         self.steps = 0
         self.hits = 0
         self.misses = 0
+        # -- the vectorized slot path (fleet scheduler) ---------------------
+        # per-slot live budgets as one (max_slots, M) matrix accumulated
+        # array-at-once by record_slots; budgets flush into the
+        # per_request / retired dicts only at release time, so NO
+        # per-request Python loop runs on the step path.
+        self._slot_budget = (np.zeros((max_slots, m), np.float64)
+                             if max_slots else None)
+        self._slot_owner: list = [None] * (max_slots or 0)
 
     def record_step(self, seq_ids: Sequence[Hashable], hit: np.ndarray,
                     flat_rows: np.ndarray, leaf_size: int) -> None:
@@ -458,6 +475,76 @@ class TranslationMeter:
         self.hits += h
         self.misses += n - h
 
+    # -- the vectorized slot path (fleet scheduler) --------------------------
+    def bind_slot(self, slot: int, req_id: Hashable) -> None:
+        """Attach ``req_id`` to a scheduler slot (admission).  Requires
+        the meter was built with ``max_slots``."""
+        assert self._slot_budget is not None, "meter built without slots"
+        assert self._slot_owner[slot] is None, (slot, req_id)
+        self._slot_owner[slot] = req_id
+
+    def record_slots(self, slots: np.ndarray, hit: np.ndarray,
+                     flat_rows: np.ndarray, leaf_size: int, *,
+                     shared_leaves: bool = False) -> None:
+        """Vectorized :meth:`record_step` over scheduler SLOTS: prices
+        one fleet step for every active slot with no per-request Python
+        loop — line counts, per-mechanism cycles and the per-slot budget
+        accumulation are all array-at-once.  ``shared_leaves=True``
+        (prefix-sharing mixes) counts radix-org lines with batch-global
+        shared-leaf dedup (:func:`_np_row_lines_shared`): a leaf walked
+        by several missing sharers in the same step costs its lines
+        once."""
+        assert self._slot_budget is not None, "meter built without slots"
+        slots = np.asarray(slots, np.int64)
+        n = slots.size
+        if n == 0:
+            return
+        hit = np.asarray(hit, bool)
+        flat = np.asarray(flat_rows, np.int32)
+        lf = np.ones(n, np.int64)
+        lr = np.ones(n, np.int64)
+        lseg = np.ones(n, np.int64)
+        linv = np.ones(n, np.int64)
+        miss = np.flatnonzero(~hit)
+        if miss.size:
+            ls = _usable_leaf_size(flat.shape[1], leaf_size)
+            rows = flat[miss]
+            if shared_leaves:
+                lf[miss], lr[miss] = _np_row_lines_shared(rows, ls)
+            else:
+                lf[miss], lr[miss] = _np_row_lines(rows, ls)
+            if self.model.needs_zoo_lines:
+                lseg[miss] = _np_seg_lines(rows)
+                linv[miss] = _np_inv_lines(rows)
+        per_seq = self.model.lookup_cycles(hit, lf, lr, lseg, linv)
+        self._slot_budget[slots] += per_seq      # slots are unique
+        step = per_seq.sum(axis=0)
+        self.step_cycles.append(step)
+        self.total += step
+        self.tokens += n
+        self.steps += 1
+        h = int(hit.sum())
+        self.hits += h
+        self.misses += n - h
+
+    def release_slot(self, slot: int, *, retire: bool) -> None:
+        """Fold a slot's accumulated budget into its request's dict
+        entry (preemption keeps it live — re-prefill work accumulates
+        across incarnations; ``retire=True`` moves it to the bounded
+        retired history)."""
+        assert self._slot_budget is not None, "meter built without slots"
+        req_id = self._slot_owner[slot]
+        assert req_id is not None, slot
+        self._slot_owner[slot] = None
+        budget = self._slot_budget[slot].copy()
+        self._slot_budget[slot] = 0.0
+        if req_id in self.per_request:
+            self.per_request[req_id] = self.per_request[req_id] + budget
+        else:
+            self.per_request[req_id] = budget
+        if retire:
+            self.retire_request(req_id)
+
     def retire_request(self, seq_id: Hashable) -> None:
         """Move a completed request's budget out of the live dict (kept
         in the bounded ``retired`` history) — called by the scheduler
@@ -473,16 +560,22 @@ class TranslationMeter:
         only).  A recycled request id SUMS across its incarnations —
         the partition over ``total`` survives id reuse."""
         out: Dict[Hashable, np.ndarray] = {}
-        for sid, budget in list(self.retired) + list(
-                self.per_request.items()):
+        live_slots = (
+            [(rid, self._slot_budget[s])
+             for s, rid in enumerate(self._slot_owner) if rid is not None]
+            if self._slot_budget is not None else [])
+        for sid, budget in (list(self.retired)
+                            + list(self.per_request.items()) + live_slots):
             if sid in out:
                 out[sid] = out[sid] + budget
             else:
                 out[sid] = budget.copy()
         return out
 
-    def tokens_per_sec(self) -> Dict[str, float]:
-        return self.model.tokens_per_sec(self.tokens, self.total)
+    def tokens_per_sec(self, model_cycles_per_token: float | None = None
+                       ) -> Dict[str, float]:
+        return self.model.tokens_per_sec(self.tokens, self.total,
+                                         model_cycles_per_token)
 
     def translation_cycles(self) -> Dict[str, float]:
         return {m: float(self.total[i])
@@ -534,6 +627,44 @@ def _np_row_lines(flat: np.ndarray, leaf_size: int
     leaves = mapped.reshape(n, maxp // leaf_size, leaf_size)
     dir_valid = leaves.any(-1)                        # (N, n_dir)
     lr = _np_group_lines(dir_valid) + _np_group_lines(leaves).sum(-1)
+    return lf, lr
+
+
+def _np_row_lines_shared(flat: np.ndarray, leaf_size: int
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """:func:`_np_row_lines` with BATCH-GLOBAL shared-leaf dedup on the
+    radix count — the numpy hot-path twin of
+    ``block_table.count_pte_lines_shared`` (pinned equal by tests).
+
+    A leaf whose physical-page content is identical across rows (a
+    prefix-shared system prompt) is one allocation: its lines are
+    charged to the FIRST row (row-major) referencing it and zero to
+    every other sharer.  The flat count is unchanged — each flat row is
+    its own contiguous allocation, so prefix sharing buys it nothing
+    (NDPage's tradeoff, surfaced end-to-end).
+    """
+    mapped = flat >= 0                                # (N, maxp)
+    lf = _np_group_lines(mapped)
+    n, maxp = mapped.shape
+    n_dir = maxp // leaf_size
+    leaves = flat.reshape(n * n_dir, leaf_size)
+    lmapped = mapped.reshape(n * n_dir, leaf_size)
+    valid = lmapped.any(-1)
+    lines = np.zeros(n * n_dir, np.int64)
+    vidx = np.flatnonzero(valid)
+    if vidx.size:
+        sub = leaves[vidx]
+        # deterministic first occurrence of each distinct leaf content
+        # (np.unique's return_index is not guaranteed first-occurrence
+        # for axis-based unique)
+        _, inverse = np.unique(sub, axis=0, return_inverse=True)
+        inverse = inverse.reshape(-1)
+        first = np.full(int(inverse.max()) + 1, vidx.size, np.int64)
+        np.minimum.at(first, inverse, np.arange(vidx.size))
+        keep = vidx[first]
+        lines[keep] = _np_group_lines(lmapped[keep])
+    dir_valid = valid.reshape(n, n_dir)
+    lr = _np_group_lines(dir_valid) + lines.reshape(n, n_dir).sum(-1)
     return lf, lr
 
 

@@ -273,7 +273,7 @@ register(MechanismSpec(
                 "NDP L1 — degrades toward radix"))
 
 # ---------------------------------------------------------------------------
-# design-space search structural variants (repro.sim.search)
+# design-space search structural variants (repro.sim._search)
 # ---------------------------------------------------------------------------
 # The search genome's structural half is (flatten level, L1-bypass
 # policy, huge-page mapping).  Three of the eight combinations already
@@ -318,7 +318,7 @@ register(MechanismSpec(
     description="search variant: flattened-PL3 walk, cached PTE fills, "
                 "2MB huge pages"))
 
-# The design-space search's winning configuration (repro.sim.search,
+# The design-space search's winning configuration (repro.sim._search,
 # space "default", seed 20250808): the paper's exact machine geometry
 # (32-entry PWC @2cyc, 64x4 L1 DTLB, 1536-entry L2 TLB) but flattening
 # PL3/PL2/PL1 instead of PL2/PL1 — it DOMINATES the paper's NDPage

@@ -46,7 +46,7 @@ flag tables (:func:`_mech_arrays`) enter the jit as plain operands.
 That split is what makes parameter sweeps cheap — a grid over memory
 latency or the L1-bypass flag reuses one compiled runner, with the
 varying values riding the batch lanes as data (see
-:mod:`repro.sim.sweep`).  The queueing delay is held constant within a
+:mod:`repro.sim._sweep`).  The queueing delay is held constant within a
 chunk (recomputed from aggregate demand at every chunk boundary), which
 is what makes the split exact.
 
@@ -762,7 +762,8 @@ def _resolve_trace(trace, num_cores: int, length: int | None):
     (which dispatches to the real-trace ingest layer), so every engine
     entry point replays real traces with zero engine changes."""
     if isinstance(trace, str):
-        from repro.workloads import generate_trace
+        from repro.workloads import generate_trace, parse_workload_spec
+        parse_workload_spec(trace)       # fail loudly at the boundary
         return generate_trace(trace, num_cores, length=length)
     return trace
 

@@ -1,525 +1,14 @@
-"""Declarative machine-parameter sweep engine for sensitivity studies.
-
-The paper's headline numbers rest on sensitivity analyses — PWC/TLB
-sizing, L1-bypass on/off, flattened-level choice, core scaling — that
-used to mean hand-editing ``MachineConfig`` and paying one compile per
-variant.  :func:`sweep` takes a declarative grid over machine
-parameters × mechanisms × workloads, buckets the cross-product by
-*compiled shape* (``machine_shape`` + mechanism walk-fn tuple), and
-runs each bucket as ONE batched chunked-scan dispatch via
-:func:`repro.sim.simulator.simulate_batch_varied`.  Parameter values
-that don't change array shapes — latencies, memory service time,
-bypass/PWC/huge flags, walk depth — ride the batch lanes as data, so
-e.g. a 4-latency × 6-workload grid is 24 simulations, one bucket, one
-compile.
-
-Grid axes (an ordered mapping ``name -> values``):
-
-  ``workload``    Table-II workload names, or ``"trace:<path>"`` for
-                  ingested real traces (see repro.workloads.ingest)
-  ``machine``     "ndp" | "cpu" (Table-I machine family)
-  ``cores``       core count (passed to the machine factory)
-  ``mechs``       mechanism-name tuples from the spec registry
-  anything else   a ``MachineConfig`` override path, dotted for nested
-                  fields: "mem_latency", "pwc_entries",
-                  "l1_dtlb.entries", "l2_tlb.entries", "l1d.size_bytes"
-
-Named presets for the paper's sensitivity figures live in
-``repro.configs.ndp_sim.SWEEPS`` (plain data, consumed here) and run as
-``sweep("pwc_size")``; ``benchmarks/sim_sweep.py`` drives them all and
-records per-bucket compile counts.
-
-:class:`SweepResult` keeps the named axes: ``select(axis=value)`` drops
-an axis, ``select(axis=[...])`` subsets it, ``scalar(metric, mech)`` /
-``speedup(mech)`` evaluate a derived metric over the whole grid as a
-plain ndarray, and ``point(...)`` returns one ``SimResult``.
-"""
-from __future__ import annotations
-
-import dataclasses
-import functools
-import hashlib
-import itertools
-import json
-import os
-import time
-from collections import OrderedDict
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
-
-import numpy as np
-
-from repro.configs.ndp_sim import (PRESETS, SWEEPS, WORKLOADS,
-                                   MachineConfig, cpu_machine, ndp_machine)
-from repro.sim.mechanisms import DEFAULT_MECHS, get as _get_mech
-from repro.sim.simulator import (SimJob, SimResult, clear_runner_cache,
-                                 machine_shape, runner_cache_info,
-                                 simulate_batch_varied, _walk_fns)
-from repro.util import resilience
-
-#: axis names with dedicated semantics; everything else is a
-#: MachineConfig override path
-SPECIAL_AXES = ("workload", "machine", "cores", "mechs")
-
-_FACTORIES = {"ndp": ndp_machine, "cpu": cpu_machine}
-
-
-# ---------------------------------------------------------------------------
-# grid -> points
-# ---------------------------------------------------------------------------
-def _field_names(obj) -> set:
-    return {f.name for f in dataclasses.fields(obj)}
-
-
-def apply_param(mach: MachineConfig, path: str, value) -> MachineConfig:
-    """Non-destructively override one MachineConfig field; one level of
-    dotting reaches into the nested Cache/TLB params
-    ("l1_dtlb.entries", "l1d.size_bytes").  Validates against dataclass
-    FIELDS, so derived properties (e.g. ``l1d.num_sets``) are rejected
-    with a named error rather than crashing in ``dataclasses.replace``.
-    """
-    head, _, rest = path.partition(".")
-    if head not in _field_names(mach):
-        raise KeyError(
-            f"unknown sweep parameter {path!r}: MachineConfig has no "
-            f"field {head!r}")
-    if rest:
-        sub = getattr(mach, head)
-        if (sub is None or not dataclasses.is_dataclass(sub)
-                or rest not in _field_names(sub)):
-            raise KeyError(
-                f"unknown sweep parameter {path!r}: "
-                f"{type(sub).__name__ if sub is not None else None} has "
-                f"no field {rest!r}")
-        return dataclasses.replace(
-            mach, **{head: dataclasses.replace(sub, **{rest: value})})
-    return dataclasses.replace(mach, **{head: value})
-
-
-@dataclasses.dataclass(frozen=True)
-class SweepPoint:
-    """One fully-resolved grid point."""
-
-    mach: MachineConfig
-    workload: str
-    mechs: Tuple[str, ...]
-
-
-def _resolve_point(named: Dict, base: str, cores: int, workload: str,
-                   mechs: Tuple[str, ...]) -> SweepPoint:
-    named = dict(named)
-    family = named.pop("machine", base)
-    if family not in _FACTORIES:
-        raise KeyError(f"unknown machine family {family!r}; "
-                       f"known: {sorted(_FACTORIES)}")
-    mach = _FACTORIES[family](int(named.pop("cores", cores)))
-    w = named.pop("workload", workload)
-    # "trace:<path>" values ingest a real trace (repro.workloads.ingest)
-    # instead of naming a Table-II generator
-    if w not in WORKLOADS and not str(w).startswith("trace:"):
-        raise KeyError(f"unknown workload {w!r}")
-    mnames = tuple(named.pop("mechs", mechs))
-    for n in mnames:
-        _get_mech(n)                      # fail fast on unknown mechanisms
-    for path, value in named.items():
-        mach = apply_param(mach, path, value)
-    return SweepPoint(mach=mach, workload=w, mechs=mnames)
-
-
-# ---------------------------------------------------------------------------
-# results
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class SweepResult:
-    """Grid of :class:`SimResult` with named axes.
-
-    ``axes`` maps axis name -> value tuple in grid order; ``results``
-    is an object ndarray of the same shape; ``stats`` records the
-    bucketing/compile accounting of the run.
-    """
-
-    axes: "OrderedDict[str, Tuple]"
-    results: np.ndarray
-    stats: Dict
-
-    def axis(self, name: str) -> Tuple:
-        return self.axes[name]
-
-    def _index(self, name: str, v) -> int:
-        vals = list(self.axes[name])
-        try:
-            return vals.index(v)
-        except ValueError:
-            raise KeyError(f"axis {name!r} has no value {v!r}; "
-                           f"values: {vals}") from None
-
-    def select(self, **kw) -> "SweepResult":
-        """Slice by axis name: a single axis value drops the axis, a
-        list/tuple of values keeps it restricted to those values (order
-        as given).  A tuple that IS one of the axis's values (e.g. a
-        mechanism tuple on a ``mechs`` axis) selects that single value.
-        Unknown axis names raise."""
-        unknown = set(kw) - set(self.axes)
-        if unknown:
-            raise KeyError(f"unknown sweep axes {sorted(unknown)}; "
-                           f"have {list(self.axes)}")
-        out = self.results
-        axes = OrderedDict()
-        drop = []
-        for dim, (name, vals) in enumerate(self.axes.items()):
-            if name not in kw:
-                axes[name] = vals
-                continue
-            sel = kw[name]
-            if not isinstance(sel, np.ndarray) and sel in vals:
-                # one axis value: drop the axis
-
-                out = np.take(out, [self._index(name, sel)], axis=dim)
-                drop.append(dim)
-            elif isinstance(sel, (list, tuple, np.ndarray)):
-                out = np.take(out, [self._index(name, v) for v in sel],
-                              axis=dim)
-                axes[name] = tuple(sel)
-            else:
-                self._index(name, sel)               # raises with values
-        if drop:
-            out = np.squeeze(out, axis=tuple(drop))
-        return SweepResult(axes=axes, results=out, stats=self.stats)
-
-    def point(self, **kw) -> SimResult:
-        """The single :class:`SimResult` at one fully-specified grid
-        point (every remaining axis must resolve to one value)."""
-        r = self.select(**kw)
-        if r.results.size != 1:
-            raise KeyError(f"point() needs every axis pinned; still "
-                           f"open: {dict(r.axes)}")
-        return r.results.reshape(())[()]
-
-    def map(self, fn) -> np.ndarray:
-        """Apply ``fn(SimResult) -> float`` over the grid."""
-        out = np.empty(self.results.shape, np.float64)
-        for idx in np.ndindex(*self.results.shape):
-            out[idx] = fn(self.results[idx])
-        return out
-
-    def scalar(self, metric: str, mech: str) -> np.ndarray:
-        """``SimResult.scalar(metric, mech)`` over the whole grid."""
-        return self.map(lambda r: r.scalar(metric, mech))
-
-    def speedup(self, mech: str, base: str = "radix") -> np.ndarray:
-        """Mean-cycle speedup of ``mech`` vs ``base`` over the grid."""
-        return self.map(lambda r: r.speedup_vs(base)[mech])
-
-
-# ---------------------------------------------------------------------------
-# the engine
-# ---------------------------------------------------------------------------
-#: SimResult array fields, in (de)serialization order, for checkpoints
-_RESULT_FIELDS = ("cycles", "instructions", "trans_cycles", "walk_cycles",
-                  "walks", "l1tlb_misses", "pte_accesses", "pte_l1_hits",
-                  "pte_mem", "data_l1_misses", "data_mem")
-
-
-@functools.lru_cache(maxsize=1)
-def _engine_ckpt_digest() -> str:
-    """Hash of every source the checkpointed results depend on besides
-    the jobs themselves — a code change can never serve stale bucket
-    results."""
-    import repro.core.page_table as _pt
-    import repro.sim.mechanisms as _mech
-    import repro.sim.simulator as _sim
-    import repro.workloads.generators as _gen
-    from repro.configs import ndp_sim as _cfg
-    h = hashlib.sha256()
-    for mod in (_sim, _mech, _gen, _pt, _cfg):
-        with open(mod.__file__, "rb") as f:
-            h.update(f.read())
-    return h.hexdigest()
-
-
-def checkpoint_key(jobs: Sequence[SimJob], chunk: int,
-                   length: int | None) -> str:
-    """Content key of one ``run_bucketed`` call: engine sources, chunk
-    layout, and every job's machine, mechanisms and trace BYTES (str
-    trace specs hash the underlying file) — the same staleness
-    discipline as the trace cache."""
-    h = hashlib.sha256()
-    h.update(_engine_ckpt_digest().encode())
-    h.update(json.dumps({"chunk": chunk, "length": length}).encode())
-    memo: Dict[int, str] = {}
-    for j in jobs:
-        h.update(json.dumps(dataclasses.asdict(j.mach), sort_keys=True,
-                            default=str).encode())
-        h.update(repr(tuple(j.mechs)).encode())
-        t = j.trace
-        if isinstance(t, str):
-            h.update(t.encode())
-            if t.startswith("trace:"):
-                from repro.workloads.ingest import (file_sha256,
-                                                    parse_trace_spec)
-                h.update(file_sha256(parse_trace_spec(t)[0]).encode())
-        else:
-            tid = id(t)
-            if tid not in memo:
-                th = hashlib.sha256()
-                for k in ("vpn", "off", "work"):
-                    th.update(np.ascontiguousarray(t[k]).tobytes())
-                th.update(str(int(t["pages"])).encode())
-                memo[tid] = th.hexdigest()
-            h.update(memo[tid].encode())
-    return h.hexdigest()[:20]
-
-
-def _ckpt_pack(results: Sequence[SimResult]) -> Dict:
-    out: Dict = {"n": np.int64(len(results))}
-    for k, r in enumerate(results):
-        out[f"j{k}_mechs"] = np.asarray(r.mechs)
-        out[f"j{k}_accesses"] = np.int64(r.accesses)
-        for f in _RESULT_FIELDS:
-            out[f"j{k}_{f}"] = getattr(r, f)
-    return out
-
-
-def _ckpt_unpack(arrays: Dict, expect: int) -> Optional[List[SimResult]]:
-    try:
-        if int(arrays["n"]) != expect:
-            return None
-        return [SimResult(
-            mechs=tuple(str(m) for m in arrays[f"j{k}_mechs"]),
-            accesses=int(arrays[f"j{k}_accesses"]),
-            **{f: arrays[f"j{k}_{f}"] for f in _RESULT_FIELDS})
-            for k in range(expect)]
-    except KeyError:                     # schema drift: re-dispatch
-        return None
-
-
-def _resolve_checkpoint(checkpoint, jobs, chunk, length
-                        ) -> Optional[str]:
-    """The checkpoint path prefix for this call, or None (off).
-
-    ``checkpoint``: None consults ``SIM_SWEEP_CHECKPOINT`` (unset/0 =
-    off, any other value = on); True/"auto" derive the content key;
-    any other string IS the key (caller-managed staleness)."""
-    if checkpoint is None:
-        env = os.environ.get("SIM_SWEEP_CHECKPOINT", "")
-        checkpoint = env not in ("", "0") and (env
-                                               if env != "1" else "auto")
-    if not checkpoint:
-        return None
-    from repro.workloads import trace_cache_dir
-    d = trace_cache_dir()
-    if d is None:
-        return None
-    key = (checkpoint_key(jobs, chunk, length)
-           if checkpoint in (True, "auto")
-           else str(checkpoint))
-    return os.path.join(d, f"sweepckpt_{key}")
-
-
-def run_bucketed(jobs: Sequence[SimJob], *, chunk: int,
-                 devices: int | None = None,
-                 length: int | None = None,
-                 checkpoint: "bool | str | None" = None,
-                 watchdog_s: float | None = None
-                 ) -> Tuple[List[SimResult], Dict]:
-    """The sweep engine's dispatch core, reusable on any heterogeneous
-    job list (the design-space search feeds whole candidate populations
-    through here): bucket ``jobs`` by compiled shape — ``machine_shape``
-    x the mechanisms' walk-fn tuple — and run each bucket as ONE
-    :func:`simulate_batch_varied` dispatch.  Value-only differences
-    (latencies, bypass/PWC/huge flags, walk depth) ride the batch lanes,
-    so compile count is bounded by the number of buckets, never the
-    number of jobs.
-
-    Resilience (both off by default; benchmarks and the nightly enable
-    them):
-
-    * ``checkpoint`` — persist each completed bucket's results to
-      ``.trace_cache/sweepckpt_<key>_b<i>.npz`` (integrity-checked,
-      atomic; key covers engine sources + every job's machine/mechs/
-      trace bytes).  A killed run resumed with the same jobs loads the
-      finished buckets bit-exactly and dispatches ONLY the rest —
-      resumed buckets cost zero compiles (``runner_cache_info``-
-      visible).  ``True``/"auto" derives the key; a string is used as
-      the key verbatim; None consults ``SIM_SWEEP_CHECKPOINT``.
-    * ``watchdog_s`` — wall-clock deadline per bucket dispatch; a hung
-      dispatch (or an injected ``dispatch`` fault) gets ONE retry
-      after :func:`repro.sim.simulator.clear_runner_cache`.  None
-      consults ``SIM_DISPATCH_TIMEOUT`` (seconds; 0 = no deadline,
-      injected faults still exercise the retry path).
-
-    Returns the per-job :class:`SimResult` list (job order preserved)
-    plus the bucketing/compile stats dict ``sweep()`` exposes as
-    ``SweepResult.stats`` (minus the grid-level entries)."""
-    if watchdog_s is None:
-        watchdog_s = float(os.environ.get("SIM_DISPATCH_TIMEOUT", "0")
-                           or 0)
-    ckpt_prefix = _resolve_checkpoint(checkpoint, jobs, chunk, length)
-
-    buckets: "OrderedDict[Tuple, List[int]]" = OrderedDict()
-    for i, j in enumerate(jobs):
-        key = (machine_shape(j.mach), _walk_fns(j.mechs))
-        buckets.setdefault(key, []).append(i)
-
-    results: List[SimResult] = [None] * len(jobs)   # type: ignore[list-item]
-    info0 = runner_cache_info()
-    per_bucket = []
-    resumed_buckets = 0
-    t0 = time.perf_counter()
-    for bi, ((shape, wf), idxs) in enumerate(buckets.items()):
-        shape_str = f"{shape.num_cores}c/" + ",".join(
-            f"{n}:{s}x{w}" for n, s, w in shape.tables)
-        entry = {
-            "shape": shape_str,
-            "walk_fns": [getattr(f, "__qualname__", str(f)) if f else None
-                         for f in wf],
-            "points": list(idxs),
-            "lanes": len(idxs),
-        }
-        ckpt_path = (f"{ckpt_prefix}_b{bi:03d}.npz"
-                     if ckpt_prefix else None)
-        outs = None
-        if ckpt_path is not None:
-            arrays = resilience.read_npz(ckpt_path)
-            if arrays is not None:
-                outs = _ckpt_unpack(arrays, len(idxs))
-        if outs is not None:
-            resumed_buckets += 1
-            resilience.log_event(
-                "resume", f"bucket {bi} ({shape_str}, {len(idxs)} lanes) "
-                          f"restored from {os.path.basename(ckpt_path)}")
-            entry.update(compiles=0, total_s=0.0, compile_s_est=0.0,
-                         resumed=True)
-        else:
-            before = runner_cache_info().misses
-            tm: Dict = {}
-            tag = f"bucket{bi}:{shape_str}"
-
-            def _dispatch():
-                inj = resilience.fault_injector()
-                if inj is not None and inj.fires("dispatch", tag):
-                    raise resilience.DispatchTimeout(
-                        f"injected dispatch fault: {tag}")
-                return simulate_batch_varied(
-                    [jobs[i] for i in idxs], length, chunk=chunk,
-                    devices=devices, timings=tm)
-
-            outs = resilience.watchdog_call(
-                _dispatch, watchdog_s, tag=tag, retries=1,
-                on_timeout=clear_runner_cache)
-            entry.update(
-                compiles=runner_cache_info().misses - before,
-                total_s=round(tm.get("total_s", 0.0), 3),
-                compile_s_est=round(tm.get("compile_s_est", 0.0), 3),
-                resumed=False)
-            if ckpt_path is not None:
-                resilience.write_npz(ckpt_path, _ckpt_pack(outs))
-        for i, res in zip(idxs, outs):
-            results[i] = res
-        per_bucket.append(entry)
-    return results, {
-        "points": len(jobs),
-        "buckets": len(buckets),
-        # buckets may split one machine shape across walk-fn tuples, so
-        # count the shapes themselves for the compile accounting
-        "distinct_shapes": len({shape for shape, _ in buckets}),
-        "runner_compiles": runner_cache_info().misses - info0.misses,
-        "resumed_buckets": resumed_buckets,
-        "wall_s": round(time.perf_counter() - t0, 3),
-        "chunk": chunk,
-        "per_bucket": per_bucket,
-    }
-
-
-GridLike = Union[str, Mapping[str, Sequence], "OrderedDict[str, Tuple]"]
-
-
-def named_sweep(name: str) -> Dict:
-    """The declarative preset dict from ``configs.ndp_sim.SWEEPS``."""
-    try:
-        return dict(SWEEPS[name])
-    except KeyError:
-        raise KeyError(f"unknown sweep preset {name!r}; "
-                       f"available: {sorted(SWEEPS)}") from None
-
-
-#: fallbacks when neither the call nor a preset pins a knob
-_DEFAULTS = dict(base="ndp", cores=4, workload="rnd",
-                 mechs=DEFAULT_MECHS, preset="smoke")
-
-
-def sweep(grid: GridLike, *, base: str | None = None,
-          cores: int | None = None, workload: str | None = None,
-          mechs: Tuple[str, ...] | None = None,
-          preset: str | None = None, trace_len: int | None = None,
-          seed: int | None = None, chunk: int | None = None,
-          devices: int | None = None,
-          checkpoint: "bool | str | None" = None,
-          watchdog_s: float | None = None) -> SweepResult:
-    """Run a sensitivity grid, one batched dispatch per shape bucket.
-
-    ``grid`` is an ordered ``axis -> values`` mapping (see module
-    docstring) or the name of a preset in ``configs.ndp_sim.SWEEPS``
-    (whose entry may also carry ``base``/``cores``/``workload``/
-    ``mechs``/``preset`` defaults; explicit keyword arguments win over
-    the preset, which wins over the module defaults).  ``preset`` names
-    a ``SimPreset`` supplying trace length / seed / chunk (default
-    "smoke"); explicit ``trace_len``/``seed``/``chunk`` win.
-    """
-    kw = dict(base=base, cores=cores, workload=workload,
-              mechs=mechs, preset=preset)
-    if isinstance(grid, str):
-        spec = named_sweep(grid)
-        axes_src = spec.pop("axes")
-        spec.pop("figure", None)          # human-facing, not a parameter
-        for k, v in spec.items():
-            if k not in kw:
-                raise KeyError(f"sweep preset {grid!r}: unknown key {k!r}")
-            if kw[k] is None:
-                kw[k] = v
-    else:
-        axes_src = grid.items() if isinstance(grid, Mapping) else grid
-    for k, v in _DEFAULTS.items():
-        if kw[k] is None:
-            kw[k] = v
-
-    sim_preset = PRESETS[kw["preset"]]
-    trace_len = sim_preset.trace_len if trace_len is None else trace_len
-    seed = sim_preset.seed if seed is None else seed
-    chunk = sim_preset.chunk if chunk is None else chunk
-
-    axes: "OrderedDict[str, Tuple]" = OrderedDict(
-        (name, tuple(vals)) for name, vals in axes_src)
-    if not axes:
-        raise ValueError("sweep needs at least one axis")
-    for name, vals in axes.items():
-        if not vals:
-            raise ValueError(f"sweep axis {name!r} has no values")
-
-    dims = tuple(len(v) for v in axes.values())
-    points: List[SweepPoint] = []
-    for combo in itertools.product(*axes.values()):
-        points.append(_resolve_point(
-            dict(zip(axes, combo)), kw["base"], kw["cores"],
-            kw["workload"], kw["mechs"]))
-
-    # resolve each point's trace once per (workload, cores), then hand
-    # the whole cross-product to the bucketed dispatch core: one
-    # simulate_batch_varied call per (machine shape, walk-fn) bucket,
-    # value-only differences riding the lanes
-    from repro.workloads import generate_trace
-    traces: Dict[Tuple[str, int], Dict] = {}   # (workload, cores) -> trace
-    for p in points:
-        key = (p.workload, p.mach.num_cores)
-        if key not in traces:
-            traces[key] = generate_trace(key[0], key[1], length=trace_len,
-                                         seed=seed, preset=sim_preset)
-    jobs = [SimJob(p.mach, traces[p.workload, p.mach.num_cores], p.mechs)
-            for p in points]
-    outs, stats = run_bucketed(jobs, chunk=chunk, devices=devices,
-                               checkpoint=checkpoint,
-                               watchdog_s=watchdog_s)
-    results = np.empty(dims, object)
-    for i, res in enumerate(outs):
-        results[np.unravel_index(i, dims)] = res
-    stats["trace_len"] = trace_len
-    return SweepResult(axes=axes, results=results, stats=stats)
+"""Deprecated import path — the implementation lives in
+``repro.sim._sweep``; import :func:`sweep` / :func:`run_bucketed` /
+:func:`apply_param` from :mod:`repro.sim` instead."""
+import warnings
+
+from repro.sim._sweep import (_RESULT_FIELDS,  # noqa: F401
+                              SweepPoint, SweepResult, apply_param,
+                              checkpoint_key, named_sweep, run_bucketed,
+                              sweep)
+
+warnings.warn(
+    "repro.sim.sweep is deprecated; import sweep / run_bucketed / "
+    "apply_param from repro.sim instead",
+    DeprecationWarning, stacklevel=2)

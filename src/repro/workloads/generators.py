@@ -294,6 +294,7 @@ def generate_trace(workload: str, num_cores: int, length: int | None = None,
     ``seed`` and the footprint scale are meaningless and ignored.
     """
     from repro.configs.ndp_sim import PRESETS, WORKLOADS
+    from repro.workloads import parse_workload_spec
     scale = 1.0
     if preset is not None:
         if isinstance(preset, str):
@@ -301,11 +302,11 @@ def generate_trace(workload: str, num_cores: int, length: int | None = None,
         length = preset.trace_len if length is None else length
         seed = preset.seed if seed is None else seed
         scale = preset.footprint_scale
-    if workload.startswith("trace:"):
-        from repro.workloads.ingest import ingest_trace, parse_trace_spec
-        path, opts = parse_trace_spec(workload)
-        return ingest_trace(path, num_cores, length=length,
-                            use_cache=use_cache, **opts)
+    wspec = parse_workload_spec(workload)
+    if wspec.kind == "trace":
+        from repro.workloads.ingest import ingest_trace
+        return ingest_trace(wspec.name, num_cores, length=length,
+                            use_cache=use_cache, **wspec.opts)
     if length is None:
         raise TypeError("generate_trace needs `length` or a `preset`")
     if seed is None:

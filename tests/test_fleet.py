@@ -1,0 +1,406 @@
+"""Fleet-scale serving: FleetScheduler/FleetEngine invariants, prefix
+sharing through the refcounted pool, translation-aware admission, the
+vectorized meter path, and the serving/sim facade + deprecation shims."""
+import importlib
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import block_table as BT
+from repro.sim.cost_model import (TranslationCostModel, TranslationMeter,
+                                  _np_row_lines_shared)
+from repro.serving import FleetEngine, FleetScheduler, Request
+from repro.serving.fleet import decode_trace_count
+from repro.util import resilience
+
+MODEL = TranslationCostModel.pinned()
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 32)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("cost_model", MODEL)
+    return FleetEngine(**kw)
+
+
+def _submit_many(eng, n, *, prompt_len=6, new=5, seed=0, **req_kw):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        eng.submit(Request.build(i, rng.integers(1, 500, prompt_len),
+                                 max_new_tokens=new, **req_kw))
+
+
+class TestFleetBasics:
+    def test_all_complete_and_pool_drains(self):
+        eng = _engine()
+        _submit_many(eng, 100)
+        done = eng.run()
+        assert len(done) == 100
+        assert sorted(r.req_id for r in done) == list(range(100))
+        assert all(len(r.generated) == 5 for r in done)
+        s = eng.sched
+        assert s.pool.free_pages == s.pool.num_pages
+        assert s.num_running == 0 and not s.has_queued()
+        assert s.stats["completed"] == 100
+        assert s.stats["peak_running"] == 32
+
+    def test_deterministic_and_one_decode_trace(self):
+        outs = []
+        t0 = decode_trace_count()
+        for _ in range(2):
+            eng = _engine()
+            _submit_many(eng, 50)
+            outs.append({r.req_id: r.generated for r in eng.run()})
+        assert outs[0] == outs[1]
+        # same shape -> the lru-cached jitted fn: no retrace per engine
+        assert decode_trace_count() - t0 <= 1
+
+    def test_matches_small_batch_semantics(self):
+        """A fleet with batch 1 produces the same per-request stream
+        lengths and scheduling stats shape as the design contract:
+        every request generates exactly max_new tokens."""
+        eng = _engine(max_batch=1)
+        _submit_many(eng, 7, new=3)
+        done = eng.run()
+        assert [len(r.generated) for r in done] == [3] * 7
+
+    def test_priority_order_admission(self):
+        eng = _engine(max_batch=2)
+        rng = np.random.default_rng(0)
+        for i, prio in enumerate([0, 5, 1, 5]):
+            eng.submit(Request.build(i, rng.integers(1, 99, 4),
+                                     max_new_tokens=2, priority=prio))
+        done = eng.run()
+        # the two priority-5 requests finish in the first wave
+        first_wave = {r.req_id for r in done[:2]}
+        assert first_wave == {1, 3}
+
+    def test_max_new_must_be_positive(self):
+        eng = _engine()
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(Request.build(0, [1, 2], max_new_tokens=0))
+
+    def test_too_long_request_rejected(self):
+        eng = _engine(max_len=8)
+        with pytest.raises(ValueError, match="exceeds"):
+            eng.submit(Request.build(0, [1] * 6, max_new_tokens=8))
+
+
+class TestDeadlines:
+    def test_deadline_zero_drops_unadmitted(self):
+        """deadline_steps=0: a request that cannot be admitted on its
+        submission tick is dropped on the next sweep, never run."""
+        eng = _engine(max_batch=1)
+        rng = np.random.default_rng(1)
+        eng.submit(Request.build(0, rng.integers(1, 99, 4),
+                                 max_new_tokens=8))
+        eng.submit(Request.build(1, rng.integers(1, 99, 4),
+                                 max_new_tokens=2, deadline_steps=0))
+        done = eng.run()
+        assert [r.req_id for r in done] == [0]
+        failed = list(eng.sched.failed)
+        assert len(failed) == 1 and failed[0].req_id == 1
+        assert failed[0].failed == "deadline"
+        assert eng.sched.stats["deadline_dropped"] == 1
+
+    def test_deadline_zero_admitted_immediately_completes(self):
+        eng = _engine()
+        eng.submit(Request.build(0, [1, 2, 3], max_new_tokens=2,
+                                 deadline_steps=0))
+        # admit on the submission tick (clock 0): the deadline sweep
+        # only ever drops QUEUED requests, so once running it completes
+        assert eng.sched.admit() != []
+        done = eng.run()
+        assert len(done) == 1 and len(done[0].generated) == 2
+
+    def test_completed_req_id_resubmission(self):
+        """Re-submitting a finished req_id is a fresh request: it runs
+        again, and the meter's budgets sum across incarnations."""
+        eng = _engine()
+        eng.submit(Request.build(7, [1, 2, 3, 4], max_new_tokens=3))
+        first = eng.run()
+        assert len(first) == 1
+        gen1 = list(first[0].generated)
+        eng.submit(Request.build(7, [1, 2, 3, 4], max_new_tokens=3))
+        second = eng.run()
+        assert len(second) == 1 and list(second[0].generated) == gen1
+        assert eng.sched.stats["completed"] == 2
+        # one budget entry, summed over both incarnations
+        budgets = eng.meter.request_budgets()
+        assert set(budgets) == {7}
+        np.testing.assert_allclose(budgets[7], eng.meter.total)
+
+
+class TestPrefixSharing:
+    def _shared_reqs(self, n, groups=2, prefix_len=8, ps=4, seed=3):
+        rng = np.random.default_rng(seed)
+        pfx = {g: rng.integers(1, 500, prefix_len) for g in range(groups)}
+        return [Request.build(
+            i, np.concatenate([pfx[i % groups],
+                               rng.integers(1, 500, ps)]),
+            max_new_tokens=4, prefix_id=i % groups, prefix_len=prefix_len)
+            for i in range(n)]
+
+    def test_shared_pages_are_refcounted(self):
+        eng = _engine(prefix_sharing=True)
+        for r in self._shared_reqs(8):
+            eng.submit(r)
+        s = eng.sched
+        s.tick()
+        s.admit()
+        # 8 running, 2 groups of 4 sharers, 2 shared pages each
+        # (prefix_len 8 / page_size 4): sharers map the SAME physical
+        # pages and the pool counts one allocation + 3 extra refs
+        assert s.num_running == 8
+        assert len(s._pfx_pages) == 2
+        for pid, pages in s._pfx_pages.items():
+            assert len(pages) == 2
+            assert all(s.pool.refcount(p) == 4 for p in pages)
+        # rows of two sharers literally alias the prefix pages
+        slots = np.flatnonzero(s.slot_req >= 0)
+        by_group = {}
+        for b in slots:
+            by_group.setdefault(int(s.slot_pfx[b]), []).append(b)
+        for pid, bs in by_group.items():
+            rows = s.slot_pages[bs]
+            assert (rows[:, :2] == s._pfx_pages[pid][None, :]).all()
+            # tails are private
+            assert len({int(x) for x in rows[:, 2]}) == len(bs)
+
+    def test_shared_page_survives_sharer_eviction(self):
+        """Evicting one sharer releases only ITS references: pages
+        another live request maps are never freed (refcount > 0)."""
+        eng = _engine(prefix_sharing=True)
+        for r in self._shared_reqs(4, groups=1):
+            eng.submit(r)
+        s = eng.sched
+        s.tick()
+        s.admit()
+        pages = s._pfx_pages[0].copy()
+        assert all(s.pool.refcount(p) == 4 for p in pages)
+        victim = s.pick_victim_slot()
+        s.preempt_slot(victim, reason="test")
+        assert all(s.pool.refcount(p) == 3 for p in pages)
+        assert 0 in s._pfx_pages          # registry entry still alive
+        # the surviving sharers' mappings are untouched
+        for b in np.flatnonzero(s.slot_req >= 0):
+            assert (s.slot_pages[b, :2] == pages).all()
+        # finish everything (the victim re-admits after backoff)
+        done = eng.run()
+        assert len(done) == 4
+        assert s.pool.free_pages == s.pool.num_pages
+        assert not s._pfx_pages and not s._pfx_sharers
+
+    def test_sharing_changes_radix_cycles_only(self):
+        def run(sharing):
+            eng = _engine(max_batch=16, max_len=32, page_size=4,
+                          prefix_sharing=sharing)
+            # prefix_len 16 = one FULL leaf (leaf_size 4 pages): radix
+            # shared-leaf dedup only fires on fully-identical leaves
+            for r in self._shared_reqs(16, groups=2, prefix_len=16):
+                eng.submit(r)
+            done = eng.run()
+            return ({r.req_id: r.generated for r in done},
+                    eng.throughput())
+        gen_on, rep_on = run(True)
+        gen_off, rep_off = run(False)
+        assert gen_on == gen_off          # tokens are cost-independent
+        cyc_on = rep_on["translation_cycles"]
+        cyc_off = rep_off["translation_cycles"]
+        assert cyc_on["radix"] < cyc_off["radix"]
+        assert cyc_on["ndpage"] == cyc_off["ndpage"]
+        assert cyc_on["ideal"] == 0.0
+        tps_on, tps_off = (rep_on["tokens_per_sec"],
+                           rep_off["tokens_per_sec"])
+        assert tps_on["radix"] > tps_off["radix"]
+
+    def test_np_shared_lines_match_jnp_oracle(self):
+        """The meter's vectorized shared-leaf dedup equals the
+        block_table pairwise oracle on random mappings with planted
+        duplicate leaves."""
+        import jax.numpy as jnp
+        rng = np.random.default_rng(11)
+        for trial in range(5):
+            b, maxp, ls = 6, 16, 4
+            flat = rng.integers(0, 400, (b, maxp)).astype(np.int32)
+            flat[rng.random((b, maxp)) < 0.3] = -1
+            flat[:, :ls] = flat[0, :ls]       # planted shared leaf
+            flat[3] = -1                      # an empty row
+            lf, lr = _np_row_lines_shared(flat, ls)
+            want = np.asarray(
+                BT.count_pte_lines_shared(jnp.asarray(flat), ls))
+            np.testing.assert_array_equal(lr, want)
+
+
+class TestEvictStorm:
+    def _run(self, inject, n=300, seed=3):
+        eng = _engine(max_batch=256, max_len=64, page_size=8)
+        rng = np.random.default_rng(seed)
+        for i in range(n):
+            eng.submit(Request.build(i, rng.integers(1, 999, 10),
+                                     max_new_tokens=12,
+                                     prefix_id=i % 4, prefix_len=8))
+        if inject:
+            plan = resilience.FaultInjector.from_plan("evict_storm")
+            with resilience.inject_faults(plan):
+                done = eng.run()
+        else:
+            done = eng.run()
+        return done, eng
+
+    def test_bit_exact_resume_at_256_concurrent(self):
+        clean, _ = self._run(False)
+        storm, eng = self._run(True)
+        assert eng.sched.stats["peak_running"] >= 256
+        assert eng.sched.stats["preempted"] >= 3
+        assert eng.sched.stats["resumed"] >= 3
+        a = {r.req_id: r.generated for r in clean}
+        b = {r.req_id: r.generated for r in storm}
+        assert a == b
+        assert eng.sched.pool.free_pages == eng.sched.pool.num_pages
+
+
+class TestTranslationBudget:
+    def test_budget_admits_fewer(self):
+        def peak(budget):
+            eng = _engine(max_batch=32, translation_budget=budget)
+            _submit_many(eng, 64, new=6)
+            done = eng.run()
+            assert (eng.sched.stats["completed"]
+                    + eng.sched.stats["shed"]) == 64
+            return eng.sched.stats["peak_running"]
+        free = peak(None)
+        capped = peak(300.0)
+        assert free == 32
+        assert 0 < capped < free
+
+    def test_budget_requires_meter(self):
+        with pytest.raises(ValueError, match="meter"):
+            FleetScheduler(num_pages=64, max_batch=4, page_size=4,
+                           max_len=16, translation_budget=100.0)
+
+
+class TestMeterSlotPath:
+    def test_record_slots_equals_record_step(self):
+        """The vectorized slot path prices identically to the dict
+        path on the same rows (sharing off)."""
+        rng = np.random.default_rng(5)
+        flat = rng.integers(0, 200, (6, 8)).astype(np.int32)
+        flat[rng.random((6, 8)) < 0.4] = -1
+        hit = np.array([1, 0, 1, 0, 0, 1], bool)
+        m1 = TranslationMeter(MODEL)
+        m1.record_step(list(range(6)), hit, flat, 4)
+        m2 = TranslationMeter(MODEL, max_slots=8)
+        slots = np.array([7, 3, 0, 5, 1, 2])
+        for s, rid in zip(slots, range(6)):
+            m2.bind_slot(int(s), rid)
+        m2.record_slots(slots, hit, flat, 4)
+        for s in slots:
+            m2.release_slot(int(s), retire=True)
+        np.testing.assert_allclose(m1.total, m2.total)
+        b1, b2 = m1.request_budgets(), m2.request_budgets()
+        assert set(b1) == set(b2)
+        for k in b1:
+            np.testing.assert_allclose(b1[k], b2[k])
+        assert (m1.hits, m1.misses, m1.tokens) == (m2.hits, m2.misses,
+                                                   m2.tokens)
+
+    def test_budgets_partition_total(self):
+        eng = _engine()
+        _submit_many(eng, 40)
+        eng.run()
+        acc = np.sum(list(eng.meter.request_budgets().values()), axis=0)
+        np.testing.assert_allclose(acc, eng.meter.total)
+
+
+class TestBoundedFailed:
+    def test_fleet_failed_is_bounded(self):
+        s = FleetScheduler(num_pages=64, max_batch=4, page_size=4,
+                           max_len=16, failed_history=8)
+        rng = np.random.default_rng(0)
+        for i in range(50):
+            s.submit(Request.build(i, rng.integers(1, 99, 3),
+                                   max_new_tokens=2, deadline_steps=0))
+        for _ in range(3):
+            s.tick()
+            s._deadline_sweep()
+        assert s.stats["deadline_dropped"] == 50   # exact counters
+        assert len(s.failed) == 8                  # bounded history
+
+    def test_batch_scheduler_failed_is_bounded(self):
+        from repro.core.kv_page_manager import KVPageManager
+        from repro.serving import BatchScheduler
+        kvm = KVPageManager(64, 4, 4, 16)
+        s = BatchScheduler(kvm, 4, failed_history=8)
+        for i in range(50):
+            s.submit(Request.build(i, [1, 2, 3], max_new_tokens=2,
+                                   deadline_steps=0))
+        s.tick()
+        s.tick()
+        s._next_admissible()
+        assert s.stats["deadline_dropped"] == 50
+        assert len(s.failed) == 8
+
+
+class TestFacadeAndShims:
+    @pytest.fixture(autouse=True)
+    def _unshadow_facade(self):
+        """Importing a shim module (``repro.sim.sweep``) rebinds the
+        package attribute ``sweep`` from the facade function to the
+        shim module — Python's submodule-binding rule.  Restore the
+        facade after each test so shim imports here can't leak into
+        tests that use ``from repro.sim import sweep``."""
+        yield
+        import repro.sim as sim
+        from repro.sim import _search as si
+        from repro.sim import _sweep as sw
+        sim.sweep, sim.search = sw.sweep, si.search
+
+    SHIMS = {
+        "repro.serving.scheduler": ("BatchScheduler", "Request"),
+        "repro.serving.engine": ("ServeEngine", "greedy_reference"),
+        "repro.sim.sweep": ("sweep", "run_bucketed", "apply_param"),
+        "repro.sim.search": ("search", "SearchSpace"),
+    }
+
+    def test_shims_warn_once_and_reexport(self):
+        for mod, names in self.SHIMS.items():
+            sys.modules.pop(mod, None)
+            with warnings.catch_warnings(record=True) as w:
+                warnings.simplefilter("always")
+                m = importlib.import_module(mod)
+            dep = [x for x in w
+                   if issubclass(x.category, DeprecationWarning)]
+            assert len(dep) == 1, (mod, [str(x.message) for x in w])
+            for n in names:
+                assert hasattr(m, n), (mod, n)
+
+    def test_shims_alias_the_real_objects(self):
+        import repro.serving as serving
+        from repro.sim import _sweep as impl_w
+        sys.modules.pop("repro.serving.scheduler", None)
+        sys.modules.pop("repro.sim.sweep", None)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            import repro.serving.scheduler as shim_s
+            import repro.sim.sweep as shim_w
+        assert shim_s.Request is serving.Request
+        assert shim_s.BatchScheduler is serving.BatchScheduler
+        assert shim_w.sweep is impl_w.sweep
+        assert shim_w.run_bucketed is impl_w.run_bucketed
+
+    def test_facade_exports_functions_not_modules(self):
+        import repro.sim as sim
+        assert callable(sim.sweep) and sim.sweep.__name__ == "sweep"
+        assert callable(sim.search) and sim.search.__name__ == "search"
+        assert callable(sim.run_bucketed)
+        assert callable(sim.apply_param)
+
+    def test_request_build_validates_prefix(self):
+        with pytest.raises(ValueError, match="prefix_len"):
+            Request.build(0, [1, 2, 3], prefix_id=1, prefix_len=9)
+        r = Request.build(0, [1, 2, 3], prefix_id=1, prefix_len=2)
+        assert r.prefix_id == 1 and r.submit_tick == -1

@@ -153,7 +153,7 @@ def test_online_softmax_chunking_invariance(seed, chunks):
 def test_pareto_frontier_membership_iff_nondominated(vals):
     """pareto_indices returns EXACTLY the non-dominated vectors: every
     member is undominated, every non-member has a dominator."""
-    from repro.sim.search import OBJECTIVES, dominates, pareto_indices
+    from repro.sim._search import OBJECTIVES, dominates, pareto_indices
     names = [n for n, _ in OBJECTIVES]
     vecs = [dict(zip(names, row)) for row in vals]
     front = set(pareto_indices(vecs))

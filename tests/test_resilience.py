@@ -194,7 +194,7 @@ class TestSweepCheckpoint:
     GRID = {"mem_latency": (100, 170), "pwc_entries": (16, 32)}
 
     def _sweep(self, **kw):
-        from repro.sim.sweep import sweep
+        from repro.sim import sweep
         return sweep(self.GRID, cores=2, trace_len=LEN_CKPT,
                      chunk=CHUNK_CKPT, **kw)
 

@@ -14,11 +14,11 @@ import sys
 import numpy as np
 import pytest
 
-from repro.sim.search import (OBJECTIVES, SearchSpace, build_machine,
+from repro.sim._search import (OBJECTIVES, SearchSpace, build_machine,
                               dominates, evaluate_genomes, mech_for,
                               merge_search_section, paper_genome,
                               pareto_indices, search, sram_kb)
-from repro.sim.sweep import sweep
+from repro.sim import sweep
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks import sim_search  # noqa: E402

@@ -9,7 +9,7 @@ from repro.config import get_arch, smoke_variant
 from repro.core import block_table as BT
 from repro.models import init_params
 from repro.serving import BatchScheduler, Request, ServeEngine
-from repro.serving.engine import greedy_reference
+from repro.serving import greedy_reference
 
 CFG = dataclasses.replace(smoke_variant(get_arch("internlm2-1.8b")),
                           dtype="float32")

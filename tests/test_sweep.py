@@ -13,8 +13,7 @@ import numpy as np
 import pytest
 
 from repro.configs.ndp_sim import SWEEPS, ndp_machine
-from repro.sim import simulate, sweep
-from repro.sim.sweep import apply_param
+from repro.sim import apply_param, simulate, sweep
 from repro.workloads import generate_trace
 
 #: chunk lengths unique to this file so runner-cache accounting below is

@@ -14,7 +14,7 @@ from repro.config import get_arch, smoke_variant
 from repro.configs.ndp_sim import ndp_machine
 from repro.models import init_params
 from repro.serving import Request, ServeEngine
-from repro.serving.engine import greedy_reference
+from repro.serving import greedy_reference
 from repro.sim import simulate
 from repro.workloads import generate_trace
 

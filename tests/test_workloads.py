@@ -109,3 +109,38 @@ def test_gups_is_irregular_and_graph_is_not():
     uniq_h = len(np.unique(lines_h)) / len(lines_h)
     assert uniq_g > 0.9
     assert uniq_h < 0.75
+
+
+# ---------------------------------------------------------------------------
+# parse_workload_spec: the one workload-axis parser
+# ---------------------------------------------------------------------------
+def test_parse_named_workload():
+    from repro.workloads import parse_workload_spec
+    spec = parse_workload_spec("pr")
+    assert spec.kind == "named" and spec.name == "pr" and spec.opts == {}
+    assert spec.canonical() == "pr"
+
+
+def test_parse_unknown_named_workload_lists_knowns():
+    from repro.workloads import parse_workload_spec
+    with pytest.raises(KeyError, match="unknown workload 'nope'"):
+        parse_workload_spec("nope")
+    with pytest.raises(KeyError, match="pr"):   # message lists knowns
+        parse_workload_spec("nope")
+
+
+def test_parse_trace_spec_roundtrip():
+    from repro.workloads import parse_workload_spec
+    s = "trace:/tmp/x.csv?fmt=csv&interleave=round_robin"
+    spec = parse_workload_spec(s)
+    assert spec.kind == "trace" and spec.name == "/tmp/x.csv"
+    assert spec.opts["fmt"] == "csv"
+    assert parse_workload_spec(spec.canonical()) == spec
+    moved = spec.with_path("/elsewhere/x.csv")
+    assert moved.name == "/elsewhere/x.csv" and moved.opts == spec.opts
+
+
+def test_parse_trace_spec_rejects_unknown_option():
+    from repro.workloads import parse_workload_spec
+    with pytest.raises(ValueError, match="bad option 'bogus"):
+        parse_workload_spec("trace:/tmp/x.csv?bogus=1")
