@@ -26,6 +26,9 @@ Sections (stages):
                 zoo-space search + collision analysis, with an
                 explicit verdict vs ndpage_search
                 (benchmarks/sim_zoo.py)
+  * --memory-model: bounded_linear vs banked DRAM comparison — bypass
+                margin + flat-vs-radix line-cost gap, with verdict
+                (benchmarks/sim_memory.py)
 
 ``--fast`` (or SIM_FIGS_FAST=1) runs the simulator figures on the smoke
 preset — same engine and orderings, CI wall-clock.  ``--sim-only`` skips
@@ -117,6 +120,9 @@ def main(argv=None) -> None:
     p.add_argument("--zoo", action="store_true",
                    help="also run the related-work mechanism zoo "
                         "comparison (benchmarks/sim_zoo.py)")
+    p.add_argument("--memory-model", action="store_true",
+                   help="also run the bounded-vs-banked DRAM memory "
+                        "model comparison (benchmarks/sim_memory.py)")
     p.add_argument("--stage-timeout", type=float,
                    default=float(os.environ.get("BENCH_STAGE_TIMEOUT",
                                                 "0") or 0),
@@ -275,6 +281,17 @@ def main(argv=None) -> None:
         if failed:
             raise RuntimeError(f"zoo checks FAILED: {failed}")
 
+    def st_memory_model():
+        from benchmarks import sim_memory
+        mrows, msection = sim_memory.run_memory_model(fast=fast)
+        _print_rows(mrows)
+        rows.extend(mrows)
+        write_bench_results()
+        sim_memory.merge_into_bench_json(msection, bench_sim_path)
+        failed = sim_memory.failed_checks(msection)
+        if failed:
+            raise RuntimeError(f"memory-model checks FAILED: {failed}")
+
     stage("figures", st_figures)
     if not args.sim_only:
         stage("kernels", st_kernels)
@@ -290,6 +307,8 @@ def main(argv=None) -> None:
         stage("search", st_search)
     if args.zoo:
         stage("zoo", st_zoo)
+    if args.memory_model:
+        stage("memory_model", st_memory_model)
 
     # the per-stage summary: every stage with wall time and exit detail
     # — failures quote the exception, timeouts the abandoned deadline,

@@ -69,7 +69,7 @@ def _plan_dispatch_hang(seed: int) -> bool:
     """One sweep bucket's dispatch 'hangs' (injected); the watchdog
     retries after clearing the compiled-runner cache."""
     from repro.sim._sweep import _RESULT_FIELDS, sweep
-    grid = {"mem_latency": [100, 170]}
+    grid = {"memory.latency": [100, 170]}
     clean = sweep(grid, preset="smoke", seed=seed)
     inj = resilience.FaultInjector.from_plan("dispatch_hang", seed=seed)
     with resilience.inject_faults(inj):

@@ -6,8 +6,9 @@ Table I of the paper.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Tuple
+import functools
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Tuple
 
 
 @dataclass(frozen=True)
@@ -47,14 +48,15 @@ class MachineConfig:
     # page-walk caches: one per upper level, near-ideal for L4/L3 (paper VI)
     pwc_entries: int = 32
     pwc_latency: int = 2
-    # memory: DDR4-2400 (CPU) vs HBM2 (NDP).  Latencies in core cycles;
-    # HBM2 row access is slightly slower than DDR4 but the NDP core sits in
-    # the logic layer -> much lower interconnect cost and higher bandwidth.
-    mem_latency: int = 170          # DDR4 ~65ns @2.6GHz
-    mem_bandwidth_gbs: float = 19.2
-    # effective random-access service time per 64B line (bank-limited),
-    # drives the queueing model
-    mem_service: float = 14.0
+    # memory system: a declarative repro.sim.memory_model.MemoryModel —
+    # DDR4-2400 (CPU) vs HBM2 (NDP) latencies in core cycles; HBM2 row
+    # access is slightly slower than DDR4 but the NDP core sits in the
+    # logic layer -> much lower interconnect cost and higher bandwidth.
+    # Accepts a MemoryModel, a preset name ("bounded_linear"/"banked"),
+    # a field dict, or None (the bounded_linear DDR4 default).  The old
+    # flat kwargs mem_latency/mem_bandwidth_gbs/mem_service still work
+    # (deprecated, one warning per process) and read back as properties.
+    memory: Any = None
     interconnect_hop: int = 4       # mesh hop latency, cycles
     interconnect_hops_to_mem: int = 8
     # --- mechanism-zoo knobs (all inert at their defaults) ---
@@ -73,6 +75,54 @@ class MachineConfig:
     num_stacks: int = 1
     stack_hop_cycles: int = 36
 
+    def __post_init__(self):
+        # lazy import: repro.sim.memory_model lives under the repro.sim
+        # package whose __init__ imports modules that import THIS module
+        # — resolving at first-instantiation time (module fully loaded)
+        # keeps either import order working
+        from repro.sim.memory_model import resolve_memory_model
+        object.__setattr__(self, "memory", resolve_memory_model(self.memory))
+
+    # -- deprecated flat memory fields, kept readable as views ------------
+    @property
+    def mem_latency(self) -> float:
+        """Deprecated: read ``memory.latency``."""
+        return self.memory.latency
+
+    @property
+    def mem_bandwidth_gbs(self) -> float:
+        """Deprecated: read ``memory.bandwidth_gbs``."""
+        return self.memory.bandwidth_gbs
+
+    @property
+    def mem_service(self) -> float:
+        """Deprecated: read ``memory.service``."""
+        return self.memory.service
+
+
+# Legacy-kwarg shim: MachineConfig(mem_latency=..., mem_service=...,
+# mem_bandwidth_gbs=...) — including via dataclasses.replace() — folds
+# the flat values into ``memory`` with ONE DeprecationWarning per
+# process (the PR-9 idiom).  A wrapped __init__ rather than InitVar
+# fields so the deprecated names never reappear as real fields (asdict,
+# repr, and the sweep checkpoint keys stay clean).
+_dc_init = MachineConfig.__init__
+
+
+@functools.wraps(_dc_init)
+def _init_with_legacy_mem(self, *args, **kwargs):
+    from repro.sim.memory_model import LEGACY_FIELDS, warn_legacy_memory
+    legacy = {LEGACY_FIELDS[k]: kwargs.pop(k)
+              for k in tuple(kwargs) if k in LEGACY_FIELDS}
+    _dc_init(self, *args, **kwargs)
+    if legacy:
+        warn_legacy_memory("MachineConfig(" +
+                           "/".join(f"{k}=" for k in LEGACY_FIELDS) + ")")
+        object.__setattr__(self, "memory", replace(self.memory, **legacy))
+
+
+MachineConfig.__init__ = _init_with_legacy_mem
+
 
 def cpu_machine(cores: int) -> MachineConfig:
     return MachineConfig(
@@ -80,7 +130,8 @@ def cpu_machine(cores: int) -> MachineConfig:
         l2=CacheParams(512 * 1024, 16, 16),
         # Table I: 2MB/core — modelled as a private 2MB slice per core
         l3=CacheParams(2 * 1024 * 1024, 16, 35),
-        mem_latency=170, mem_bandwidth_gbs=19.2, mem_service=12.0,
+        memory=dict(latency=170.0,          # DDR4 ~65ns @2.6GHz
+                    bandwidth_gbs=19.2, service=12.0),
         interconnect_hops_to_mem=8,
     )
 
@@ -89,11 +140,12 @@ def ndp_machine(cores: int) -> MachineConfig:
     return MachineConfig(
         name=f"ndp-{cores}c", is_ndp=True, num_cores=cores,
         l2=None, l3=None,
-        # NDP core in the logic layer: short path to the stacked DRAM
-        mem_latency=100, mem_bandwidth_gbs=307.2,   # HBM2 4-stack
-        # irregular single-line accesses are row-miss/bank-limited, not
-        # peak-BW-limited: tRC(~45ns=117cyc)/active-banks + ctrl overhead
-        mem_service=46.0,
+        # NDP core in the logic layer: short path to the stacked DRAM.
+        # HBM2 4-stack; irregular single-line accesses are row-miss/
+        # bank-limited, not peak-BW-limited: the bounded service is
+        # tRC(~45ns=117cyc)/active-banks + ctrl overhead — the banked
+        # preset models the same budget structurally (117cyc per bank).
+        memory=dict(latency=100.0, bandwidth_gbs=307.2, service=46.0),
         interconnect_hops_to_mem=1,
     )
 
@@ -218,10 +270,23 @@ SWEEPS: Dict[str, dict] = {
         figure="1/4/8-core scaling (3 shapes, 18 points)"),
     # memory latency: pure value axis — 24 points, ONE compiled runner
     "mem_latency": dict(
-        axes=(("mem_latency", (60, 100, 170, 240)),
+        axes=(("memory.latency", (60.0, 100.0, 170.0, 240.0)),
               ("workload", SWEEP_WORKLOADS)),
         base="ndp", cores=4,
         figure="memory-latency sensitivity (1 shape, 24 points, "
+               "1 compile)"),
+    # banked DRAM timing: switch the memory model to the banked preset
+    # (ONE shape — bank geometry is compiled in), then sweep the
+    # open/closed-row timings as pure value axes.  memory_model comes
+    # FIRST: overrides apply in axis order, so t_cas/t_rp land on the
+    # already-banked model.
+    "banked_timing": dict(
+        axes=(("memory_model", ("banked",)),
+              ("memory.t_cas", (15.0, 25.0, 40.0)),
+              ("memory.t_rp", (20.0, 30.0)),
+              ("workload", SWEEP_WORKLOADS)),
+        base="ndp", cores=4,
+        figure="banked DRAM timing sensitivity (1 shape, 36 points, "
                "1 compile)"),
     # mechanism zoo: the related-work designs (Victima cache-as-TLB,
     # Picorel inverted/segment, CODA co-location, range table) against
@@ -304,6 +369,21 @@ SEARCH_SPACES: Dict[str, dict] = {
         workloads=("rnd", "bc", "xs") + SEARCH_FIXTURES,
         n_random=12, population=8, generations=1, offspring=6,
         trace_len=512, chunk=512, preset="smoke", seed=11),
+    # memory-model space: is the banked row-buffer model worth its
+    # compile bucket, and does it move the structural knobs' frontier?
+    # ``memory_model`` is a genome knob applied via apply_param (the
+    # banked kind keys its own shape bucket; a NEW space rather than a
+    # "default" extension so the committed frontier baseline's genome
+    # schema stays untouched).
+    "memory": dict(
+        knobs=(("pwc_entries", (16, 32)),
+               ("flatten", ("pl2", "pl3")),
+               ("l1_bypass", (True, False)),
+               ("memory_model", ("bounded_linear", "banked"))),
+        cores=4,
+        workloads=("rnd", "bc", "xs") + SEARCH_FIXTURES[:1],
+        n_random=12, population=8, generations=1, offspring=8,
+        trace_len=512, chunk=512, preset="smoke", seed=29),
     # PR fast lane: 1 generation over a 2-shape slice, sub-minute even
     # with cold compile caches
     "quick": dict(

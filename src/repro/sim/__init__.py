@@ -11,6 +11,8 @@ from repro.sim.cost_model import (LookupCost, TranslationCostModel,  # noqa: F40
                                   TranslationMeter)
 from repro.sim.mechanisms import (DEFAULT_MECHS, MechanismSpec,  # noqa: F401
                                   register)
+from repro.sim.memory_model import (MEMORY_MODELS,  # noqa: F401
+                                    MemoryModel)
 from repro.sim.simulator import (MachineShape, SimJob,  # noqa: F401
                                  SimResult, machine_shape,
                                  runner_cache_info, simulate,

@@ -123,6 +123,9 @@ PAPER_DEFAULTS: "OrderedDict[str, object]" = OrderedDict([
     # cache-as-TLB and models a single memory stack
     ("ctlb_kb", 0),
     ("num_stacks", 1),
+    # DRAM model preset (the "memory" space flips this to "banked");
+    # the paper's numbers are calibrated on the bounded-linear model
+    ("memory_model", "bounded_linear"),
 ])
 
 #: named objectives with their optimization direction
@@ -452,6 +455,7 @@ def _engine_digest(space: SearchSpace) -> str:
     version, the mechanism registry's candidate specs, and the fixture
     trace files themselves."""
     import repro.core.page_table        # noqa: F401
+    import repro.sim.memory_model       # noqa: F401
     import repro.sim._sweep             # noqa: F401
     import repro.sim.simulator          # noqa: F401
     import repro.workloads.generators   # noqa: F401
@@ -462,7 +466,7 @@ def _engine_digest(space: SearchSpace) -> str:
     # can reach any registered spec, so per-spec hashing can't cover it
     for name in ("repro.sim.simulator", "repro.sim._sweep",
                  "repro.core.page_table", "repro.workloads.generators",
-                 "repro.sim.mechanisms"):
+                 "repro.sim.mechanisms", "repro.sim.memory_model"):
         with open(sys.modules[name].__file__, "rb") as f:
             h.update(f.read())
     reachable = set(MECH_BY_STRUCT.values())

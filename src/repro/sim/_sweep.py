@@ -21,8 +21,10 @@ Grid axes (an ordered mapping ``name -> values``):
   ``cores``       core count (passed to the machine factory)
   ``mechs``       mechanism-name tuples from the spec registry
   anything else   a ``MachineConfig`` override path, dotted for nested
-                  fields: "mem_latency", "pwc_entries",
-                  "l1_dtlb.entries", "l2_tlb.entries", "l1d.size_bytes"
+                  fields: "pwc_entries", "l1_dtlb.entries",
+                  "l2_tlb.entries", "l1d.size_bytes", "memory.latency",
+                  "memory.t_cas" — plus "memory_model", which switches
+                  to a named MemoryModel preset (calibration-preserving)
 
 Named presets for the paper's sensitivity figures live in
 ``repro.configs.ndp_sim.SWEEPS`` (plain data, consumed here) and run as
@@ -72,12 +74,37 @@ def _field_names(obj) -> set:
 
 def apply_param(mach: MachineConfig, path: str, value) -> MachineConfig:
     """Non-destructively override one MachineConfig field; one level of
-    dotting reaches into the nested Cache/TLB params
-    ("l1_dtlb.entries", "l1d.size_bytes").  Validates against dataclass
-    FIELDS, so derived properties (e.g. ``l1d.num_sets``) are rejected
-    with a named error rather than crashing in ``dataclasses.replace``.
-    """
+    dotting reaches into the nested Cache/TLB/MemoryModel params
+    ("l1_dtlb.entries", "l1d.size_bytes", "memory.t_cas").  Validates
+    against dataclass FIELDS, so derived properties (e.g.
+    ``l1d.num_sets``) are rejected with a named error rather than
+    crashing in ``dataclasses.replace``.
+
+    Two memory-specific paths get dedicated semantics: ``memory_model``
+    switches the machine to a named :data:`~repro.sim.memory_model.
+    MEMORY_MODELS` preset while keeping its calibration (see
+    :func:`~repro.sim.memory_model.with_kind`), and unknown
+    ``memory.*`` knobs raise a ``ValueError`` that LISTS the knobs (a
+    typo'd override must never silently no-op a whole sweep).  The
+    legacy flat paths ``mem_latency``/``mem_bandwidth_gbs``/
+    ``mem_service`` are rewritten to their ``memory.*`` equivalents
+    with the one-per-process DeprecationWarning."""
+    from repro.sim import memory_model as _mm
+    if path == "memory_model":
+        return dataclasses.replace(mach,
+                                   memory=_mm.with_kind(mach.memory, value))
+    if path in _mm.LEGACY_FIELDS:
+        _mm.warn_legacy_memory(f"sweep/search path {path!r}")
+        path = f"memory.{_mm.LEGACY_FIELDS[path]}"
     head, _, rest = path.partition(".")
+    if head == "memory" and rest and rest not in _field_names(
+            _mm.MemoryModel):
+        knobs = ", ".join(f"memory.{f.name}"
+                          for f in dataclasses.fields(_mm.MemoryModel))
+        raise ValueError(
+            f"unknown memory-model knob {path!r}: known knobs are "
+            f"{knobs}, or 'memory_model' to switch presets "
+            f"{tuple(_mm.MEMORY_MODELS)}")
     if head not in _field_names(mach):
         raise KeyError(
             f"unknown sweep parameter {path!r}: MachineConfig has no "
@@ -228,11 +255,12 @@ def _engine_ckpt_digest() -> str:
     results."""
     import repro.core.page_table as _pt
     import repro.sim.mechanisms as _mech
+    import repro.sim.memory_model as _mm
     import repro.sim.simulator as _sim
     import repro.workloads.generators as _gen
     from repro.configs import ndp_sim as _cfg
     h = hashlib.sha256()
-    for mod in (_sim, _mech, _gen, _pt, _cfg):
+    for mod in (_sim, _mech, _mm, _gen, _pt, _cfg):
         with open(mod.__file__, "rb") as f:
             h.update(f.read())
     return h.hexdigest()
@@ -368,8 +396,12 @@ def run_bucketed(jobs: Sequence[SimJob], *, chunk: int,
     resumed_buckets = 0
     t0 = time.perf_counter()
     for bi, ((shape, wf), idxs) in enumerate(buckets.items()):
-        shape_str = f"{shape.num_cores}c/" + ",".join(
-            f"{n}:{s}x{w}" for n, s, w in shape.tables)
+        # the display key must be as discriminating as the bucket key:
+        # the memory shape (bank geometry) is part of machine_shape, so
+        # two banked/bounded buckets must never print identically
+        shape_str = (f"{shape.num_cores}c/"
+                     + ":".join(str(p) for p in shape.memory) + "/"
+                     + ",".join(f"{n}:{s}x{w}" for n, s, w in shape.tables))
         entry = {
             "shape": shape_str,
             "walk_fns": [getattr(f, "__qualname__", str(f)) if f else None

@@ -24,9 +24,12 @@ a value-only operand, never a recompile.  Per mechanism ``m``:
                 measured average page-table-walk latency for ``m``
                 (queueing, PWC hits and cache pollution included).
   ``pte_line``  cycles per ADDITIONAL PTE cache line the rebuild
-                touches beyond the first: straight memory latency for
-                L1-bypassing mechanisms, an L1-hit-rate-weighted blend
-                for cache-filling ones.
+                touches beyond the first: the machine's per-line DRAM
+                cost (``MachineConfig.memory.line_cycles`` — under the
+                banked model a contiguous-org line streams through an
+                open row, a per-node line pays the closed-row total)
+                for L1-bypassing mechanisms, an L1-hit-rate-weighted
+                blend for cache-filling ones.
   ``org``       which serving block-table organization the mechanism's
                 line count follows: flattened mechanisms count lines of
                 the contiguous flat row (adjacent leaves SHARE 64B
@@ -61,7 +64,7 @@ from repro.sim import mechanisms as MS
 from repro.util import resilience
 
 #: part of the memo key: bump on any change to the derivation above
-_COST_MODEL_VERSION = 2
+_COST_MODEL_VERSION = 3
 
 _FACTORIES = {"ndp": ndp_machine, "cpu": cpu_machine}
 
@@ -229,15 +232,21 @@ class TranslationCostModel:
                 continue
             walk = (res.scalar("avg_ptw_latency", m)
                     + float(mach.l2_tlb.latency))
+            org = serving_org(m)
+            # contiguous orgs stream extra lines through an open DRAM
+            # row under the banked model; per-node orgs pay closed rows
+            # (identical to the flat latency under bounded_linear)
+            dram = mach.memory.line_cycles(
+                contiguous=org in (ORG_FLAT, ORG_SEG))
             if spec.bypass_l1:
-                line = float(mach.mem_latency)
+                line = dram
             else:
                 l1_hit = 1.0 - res.scalar("pte_l1_miss_rate", m)
                 line = (l1_hit * mach.l1d.latency
-                        + (1.0 - l1_hit) * mach.mem_latency)
+                        + (1.0 - l1_hit) * dram)
             costs.append(LookupCost(
                 tlb_hit=float(mach.l1_dtlb.latency), walk=round(walk, 3),
-                pte_line=round(line, 3), org=serving_org(m)))
+                pte_line=round(line, 3), org=org))
 
         model = cls(mechs=mechs, costs=tuple(costs), machine=mach.name,
                     freq_ghz=mach.freq_ghz, model_cycles_per_token=mcpt,
@@ -300,6 +309,7 @@ def _engine_digest(mechs: Tuple[str, ...]) -> str:
     sources — so a mechanism, engine, or generator change can never
     silently serve a stale memo."""
     import repro.core.page_table as _pt
+    import repro.sim.memory_model as _mm
     import repro.sim.simulator as _sim
     import repro.workloads.generators as _gen
     h = hashlib.sha256()
@@ -309,7 +319,7 @@ def _engine_digest(mechs: Tuple[str, ...]) -> str:
                        s.cache_tlb, s.segment, s.colocate, s.org,
                        getattr(s.walk_fn, "__qualname__", None))
                       ).encode())
-    for mod in (_sim, _pt, _gen, MS):
+    for mod in (_sim, _pt, _gen, MS, _mm):
         with open(mod.__file__, "rb") as f:
             h.update(f.read())
     return h.hexdigest()

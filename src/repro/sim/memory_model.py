@@ -1,0 +1,254 @@
+"""Declarative DRAM memory-model specs — the single source of memory timing.
+
+A :class:`MemoryModel` replaces the loose ``mem_latency /
+mem_bandwidth_gbs / mem_service`` scalars that used to live directly on
+``MachineConfig``.  Two named presets:
+
+* ``bounded_linear`` — the original engine model: one flat access
+  latency for every memory touch plus an aggregate bounded-linear queue
+  (``q = service * rho * K``).  The default, and bit-exact vs the
+  pre-MemoryModel engine (tests/test_memory_model.py pins this).
+* ``banked`` — per-bank row-buffer model: DRAM is ``num_banks`` banks,
+  each holding ONE open row of ``row_buffer_bytes``.  An access whose
+  bank still has its row open pays ``overhead + t_cas``; a closed-row
+  access pays the full ``overhead + t_rp + t_rcd + t_cas`` (precharge +
+  activate + column read).  The queue becomes per-bank: traffic on bank
+  0 never delays bank 1.  This is what prices the paper's structural
+  claim — flat-table walks over contiguous leaf spans keep hitting open
+  rows, while radix per-node allocations land on scattered rows.
+
+Address -> (bank, row) mapping is the standard open-page row-interleave
+over 64B line ids (the engine's address space, see
+:mod:`repro.core.page_table`)::
+
+    col  = line % lines_per_row          # within the open row
+    bank = (line / lines_per_row) % num_banks
+    row  = line / (lines_per_row * num_banks)
+
+Shape/data split: ``kind``, ``num_banks`` and ``row_buffer_bytes`` are
+SHAPE — they change carried-state array shapes and the packed hit-bit
+layout, so they key the compiled-runner cache (via
+``MachineShape.memory``).  Every latency/timing field is value-only
+DATA riding the jit as an operand: a sweep over ``t_cas``/``t_rp``/
+``service`` never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Tuple
+
+#: DRAM/cache line size the whole engine assumes
+LINE_BYTES = 64
+
+#: bounded-linear queue slope (cycles at rho = 1) and the saturation
+#: clip — shared by the aggregate (bounded_linear) and per-bank (banked)
+#: queue laws
+QUEUE_K = 6.5
+RHO_MAX = 0.96
+
+KINDS = ("bounded_linear", "banked")
+
+#: fields that are SHAPE (compiled into the runner); everything else is
+#: value-only data
+SHAPE_FIELDS = ("kind", "num_banks", "row_buffer_bytes")
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryModel:
+    """One machine's memory system, declaratively.
+
+    ``latency`` is the flat full-access latency of the bounded model;
+    under ``banked`` it is carried for reference/calibration (the
+    closed-row total ``overhead + t_rp + t_rcd + t_cas`` is what the
+    engine charges — :func:`with_kind` re-derives ``overhead`` so the
+    closed-row total matches the machine's calibrated ``latency``).
+    ``service`` is the queue service time per 64B line: aggregate for
+    ``bounded_linear``, PER BANK for ``banked`` (a bank is busy ~tRC per
+    random access it serves).
+    """
+
+    kind: str = "bounded_linear"
+    latency: float = 170.0          # DDR4 ~65ns @2.6GHz
+    bandwidth_gbs: float = 19.2
+    service: float = 14.0
+    # --- banked geometry (SHAPE: keys the compiled-runner cache) ---
+    num_banks: int = 16
+    row_buffer_bytes: int = 2048
+    # --- banked timings (DATA: sweepable without recompiling) ---
+    t_rcd: float = 30.0             # activate (RAS-to-CAS)
+    t_rp: float = 30.0              # precharge
+    t_cas: float = 25.0             # column read
+    overhead: float = 15.0          # controller + interconnect per access
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown memory model kind {self.kind!r}: one of {KINDS}")
+        for f in ("latency", "bandwidth_gbs", "service",
+                  "t_rcd", "t_rp", "t_cas", "overhead"):
+            v = float(getattr(self, f))
+            if v < 0.0:
+                raise ValueError(f"MemoryModel.{f} must be >= 0, got {v}")
+            object.__setattr__(self, f, v)
+        for f in ("num_banks", "row_buffer_bytes"):
+            object.__setattr__(self, f, int(getattr(self, f)))
+        if self.num_banks < 1:
+            raise ValueError(f"num_banks must be >= 1, got {self.num_banks}")
+        if (self.row_buffer_bytes < LINE_BYTES
+                or self.row_buffer_bytes % LINE_BYTES):
+            raise ValueError(
+                f"row_buffer_bytes must be a positive multiple of "
+                f"{LINE_BYTES}, got {self.row_buffer_bytes}")
+
+    # -- derived timings ----------------------------------------------------
+    @property
+    def lines_per_row(self) -> int:
+        return self.row_buffer_bytes // LINE_BYTES
+
+    def miss_latency(self) -> float:
+        """Cycles for a closed-row (or bounded-model) memory access."""
+        if self.kind == "banked":
+            return self.overhead + self.t_rp + self.t_rcd + self.t_cas
+        return self.latency
+
+    def hit_latency(self) -> float:
+        """Cycles for an open-row access (banked); = miss for bounded."""
+        if self.kind == "banked":
+            return self.overhead + self.t_cas
+        return self.latency
+
+    def row_hit_save(self) -> float:
+        """Cycles an open-row hit saves vs a closed-row access: the
+        precharge + activate the hit skips.  0.0 for bounded_linear."""
+        if self.kind == "banked":
+            return self.t_rp + self.t_rcd
+        return 0.0
+
+    def line_cycles(self, contiguous: bool) -> float:
+        """Cost-model price of one additional PTE line fetched during a
+        multi-line rebuild/refill: contiguous spans (flat tables,
+        segment descriptors) stream through an open row, per-node
+        allocations (radix, inverted buckets) land on closed rows."""
+        if self.kind == "banked" and contiguous:
+            return self.hit_latency()
+        return self.miss_latency()
+
+    def shape_key(self) -> Tuple:
+        """The SHAPE half, hashable — part of ``MachineShape``.  All
+        bounded machines share one key (the banked geometry fields are
+        inert there), so existing compiled-runner sharing is unchanged."""
+        if self.kind == "banked":
+            return ("banked", self.num_banks, self.row_buffer_bytes)
+        return ("bounded_linear",)
+
+
+#: named presets.  ``banked`` is calibrated for the NDP logic-layer
+#: machine: tRP/tRCD/tCAS at HBM2-class cycle counts with miss total
+#: overhead+30+30+25 = 100 cycles (= the ndp machine's calibrated
+#: latency) and a per-bank service of ~tRC (45ns ~= 117 cycles @2.6GHz)
+#: — the bounded ndp service of 46.0 was documented as tRC/active-banks,
+#: which the per-bank queue now models structurally.
+MEMORY_MODELS = {
+    "bounded_linear": MemoryModel(),
+    "banked": MemoryModel(kind="banked", latency=100.0,
+                          bandwidth_gbs=307.2, service=117.0,
+                          num_banks=16, row_buffer_bytes=2048,
+                          t_rcd=30.0, t_rp=30.0, t_cas=25.0,
+                          overhead=15.0),
+}
+
+
+def resolve_memory_model(spec) -> MemoryModel:
+    """Normalize a ``MachineConfig.memory`` value: ``None`` -> the
+    bounded_linear default, a preset name -> the registry entry, a field
+    dict -> ``MemoryModel(**spec)``, a ``MemoryModel`` -> itself."""
+    if spec is None:
+        return MEMORY_MODELS["bounded_linear"]
+    if isinstance(spec, MemoryModel):
+        return spec
+    if isinstance(spec, str):
+        if spec not in MEMORY_MODELS:
+            raise KeyError(
+                f"unknown memory model preset {spec!r}: "
+                f"one of {tuple(MEMORY_MODELS)}")
+        return MEMORY_MODELS[spec]
+    if isinstance(spec, dict):
+        return MemoryModel(**spec)
+    raise TypeError(
+        f"MachineConfig.memory must be a MemoryModel, preset name, field "
+        f"dict, or None — got {type(spec).__name__}")
+
+
+def with_kind(cur: MemoryModel, name: str) -> MemoryModel:
+    """Switch ``cur`` to preset ``name`` while keeping the machine's own
+    calibration: ``latency``/``bandwidth_gbs`` always carry over, and
+
+    * -> ``banked``: ``overhead`` is re-derived so the closed-row total
+      equals the machine's calibrated access latency (an ndp machine's
+      banked misses cost 100 cycles, a cpu's 170);
+    * -> ``bounded_linear``: the aggregate ``service`` carries over too
+      (it is machine calibration, not preset data).
+
+    This is what the ``memory_model`` sweep/search knob applies.
+    """
+    preset = resolve_memory_model(name)
+    if preset.kind == "banked":
+        return dataclasses.replace(
+            preset, latency=cur.latency, bandwidth_gbs=cur.bandwidth_gbs,
+            overhead=max(
+                cur.latency - (preset.t_rp + preset.t_rcd + preset.t_cas),
+                0.0))
+    return dataclasses.replace(preset, latency=cur.latency,
+                               bandwidth_gbs=cur.bandwidth_gbs,
+                               service=cur.service)
+
+
+# ---------------------------------------------------------------------------
+# address mapping + queue law (generic over numpy / jax arrays / scalars)
+# ---------------------------------------------------------------------------
+def bank_of(line, num_banks: int, lines_per_row: int):
+    """64B line id -> bank index (row-interleaved open-page mapping)."""
+    return (line // lines_per_row) % num_banks
+
+
+def row_of(line, num_banks: int, lines_per_row: int):
+    """64B line id -> row id within its bank."""
+    return line // (lines_per_row * num_banks)
+
+
+def queue_delay(rate, service):
+    """Bounded-linear queue law ``q = service * rho * K`` with
+    ``rho = clip(rate * service, 0, RHO_MAX)``.  Elementwise: applied
+    per (mech,) aggregate for bounded_linear and per (mech, bank) for
+    banked — per-bank independence (bank-0 traffic never delays bank 1)
+    is structural, not a tuning choice."""
+    import jax.numpy as jnp
+    rho = jnp.clip(rate * service, 0.0, RHO_MAX)
+    return service * rho * QUEUE_K
+
+
+# ---------------------------------------------------------------------------
+# the one DeprecationWarning for the legacy flat kwargs / sweep paths
+# ---------------------------------------------------------------------------
+_WARNED_LEGACY = False
+
+#: legacy MachineConfig field -> MemoryModel field
+LEGACY_FIELDS = {"mem_latency": "latency",
+                 "mem_bandwidth_gbs": "bandwidth_gbs",
+                 "mem_service": "service"}
+
+
+def warn_legacy_memory(what: str) -> None:
+    """Warn ONCE per process about the deprecated flat memory fields —
+    shared by the ``MachineConfig`` kwarg shim and the sweep-path
+    rewrite, so a sweep over legacy paths emits a single warning."""
+    global _WARNED_LEGACY
+    if _WARNED_LEGACY:
+        return
+    _WARNED_LEGACY = True
+    warnings.warn(
+        f"{what} is deprecated: memory timing now lives on "
+        "MachineConfig.memory (a repro.sim.memory_model.MemoryModel); "
+        "use memory=MemoryModel(...)/memory.<field> paths instead",
+        DeprecationWarning, stacklevel=3)

@@ -95,6 +95,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.ndp_sim import MachineConfig
 from repro.core import page_table as PT
 from repro.sim import mechanisms as _mechanisms
+from repro.sim import memory_model as MM
 from repro.sim.mechanisms import (DEFAULT_MECHS, MAX_PTE, specs_for,
                                   tables_for)
 
@@ -120,7 +121,7 @@ HUGE_SHIFT = 9
 FRAC_4K = {1: 0.16, 2: 0.27, 4: 0.49, 8: 0.93}
 HP_STALL_BASE = 55.0
 HP_STALL_PER_CORE = 7.0
-QUEUE_K = 6.5               # bounded-linear queue slope (cycles at rho=1)
+QUEUE_K = MM.QUEUE_K        # bounded-linear queue slope (cycles at rho=1)
 # ECH: elastic cuckoo tables upsize/rehash under multi-core allocation
 # pressure (cuckoo-path inserts + table moves) — per-walk cost grows with
 # the number of allocating cores (Skarlatos et al. §upsizing).
@@ -245,15 +246,21 @@ def _table_shapes(mach: MachineConfig) -> Dict[str, Tuple[int, int]]:
 @dataclasses.dataclass(frozen=True)
 class MachineShape:
     """Everything about a ``MachineConfig`` that determines ARRAY SHAPES
-    in the compiled runner: the core count plus the (sets, ways)
-    geometry of every LRU table.  Two configs with equal shape (and the
-    same mechanism walk functions) share one compiled runner — their
-    remaining differences (latencies, memory service time, huge-page
-    stalls, per-mechanism flags) are plain jit operands.  Hashable on
-    purpose: this IS the runner-cache key."""
+    in the compiled runner: the core count, the (sets, ways) geometry
+    of every LRU table, and the memory model's SHAPE half (kind + bank
+    geometry — a banked machine carries per-bank row state and five
+    extra hit bits).  Two configs with equal shape (and the same
+    mechanism walk functions) share one compiled runner — their
+    remaining differences (latencies, memory service/row timings,
+    huge-page stalls, per-mechanism flags) are plain jit operands.
+    Hashable on purpose: this IS the runner-cache key."""
 
     num_cores: int
     tables: Tuple[Tuple[str, int, int], ...]    # (name, sets, ways)
+    #: MemoryModel.shape_key(): ("bounded_linear",) for every bounded
+    #: machine — the banked geometry fields are inert there — or
+    #: ("banked", num_banks, row_buffer_bytes)
+    memory: Tuple = ("bounded_linear",)
 
     @property
     def hier(self) -> Tuple[str, ...]:
@@ -265,7 +272,8 @@ def machine_shape(mach: MachineConfig) -> MachineShape:
     return MachineShape(
         num_cores=mach.num_cores,
         tables=tuple((n, s, w)
-                     for n, (s, w) in _table_shapes(mach).items()))
+                     for n, (s, w) in _table_shapes(mach).items()),
+        memory=mach.memory.shape_key())
 
 
 def _shape_tables(shape: MachineShape) -> Dict[str, Tuple[int, int]]:
@@ -276,15 +284,21 @@ def _data_params(mach: MachineConfig) -> Dict[str, np.float32]:
     """The value-like half of a ``MachineConfig``: every latency the
     timing epilogue consumes, as numpy scalars (NOT Python floats —
     weak-typed constants would bake into the compiled graph and defeat
-    the shape/data split)."""
+    the shape/data split).  Memory timing comes from the MemoryModel:
+    ``mem_lat`` is the closed-row/full access latency, ``row_save`` the
+    precharge+activate cycles an open-row hit skips (0.0 for
+    bounded_linear — the key exists either way so dp pytrees always
+    match), ``service`` the aggregate (bounded) or per-bank (banked)
+    queue service time."""
     return {k: np.float32(v) for k, v in {
-        "mem_lat": mach.mem_latency,
+        "mem_lat": mach.memory.miss_latency(),
+        "row_save": mach.memory.row_hit_save(),
         "l1_lat": mach.l1d.latency,
         "l2_lat": mach.l2.latency if mach.l2 else 0.0,
         "l3_lat": mach.l3.latency if mach.l3 else 0.0,
         "l2tlb_lat": mach.l2_tlb.latency,
         "pwc_lat": mach.pwc_latency,
-        "service": mach.mem_service,
+        "service": mach.memory.service,
         "promo": (HP_STALL_BASE
                   + HP_STALL_PER_CORE * max(mach.num_cores - 1, 0)),
         "ech_rehash": ECH_REHASH_QUAD * max(mach.num_cores - 2, 0) ** 2,
@@ -359,7 +373,16 @@ def init_state(mach: MachineConfig, m: int = M, batch: int | None = None):
     st = {name: table(*shape) for name, shape in _table_shapes(mach).items()}
     st["stamp"] = jnp.zeros(lead + (c, m), jnp.int32)
     st["clock"] = jnp.zeros(lead + (m, c), jnp.float32)
-    st["mem_accs"] = jnp.zeros(lead + (m,), jnp.float32)
+    if mach.memory.kind == "banked":
+        # per-bank open-row ids (rides the scan carry like the LRU
+        # tables; -1 = all rows closed) and per-bank access totals for
+        # the per-bank queue windows
+        st["bank_row"] = jnp.full(lead + (c, m, mach.memory.num_banks),
+                                  -1, jnp.int32)
+        st["mem_accs"] = jnp.zeros(lead + (m, mach.memory.num_banks),
+                                   jnp.float32)
+    else:
+        st["mem_accs"] = jnp.zeros(lead + (m,), jnp.float32)
     st["counters"] = {k: jnp.zeros(lead + (m, c), jnp.float32)
                       for k in ("trans", "walks", "walk_cyc", "l1tlb_miss",
                                 "pte_acc", "pte_l1_hit", "pte_mem",
@@ -380,14 +403,21 @@ def _build_model(shape: MachineShape, batched: bool = False):
     hier = shape.hier
     shapes = _shape_tables(shape)
     has_ctlb = "ctlb" in shapes
+    has_banked = shape.memory[0] == "banked"
+    if has_banked:
+        n_banks = int(shape.memory[1])
+        lines_per_row = int(shape.memory[2]) // MM.LINE_BYTES
 
     # hit-bit layout of the packed per-entry int32
     #   0: l1tlb  1: l2tlb  2..5: pwc level  6+5*h..10+5*h: hierarchy
     #   level h hits for [pte0..pte3, data]; when the machine HAS a
     #   cache-as-TLB its hit bit is APPENDED after everything else so
-    #   pre-existing bit indices (and values) never move
-    n_bits = 6 + 5 * len(hier) + (1 if has_ctlb else 0)
+    #   pre-existing bit indices (and values) never move; a banked
+    #   memory likewise APPENDS five row-buffer-hit bits (one per line
+    #   site) after that.  Worst case 6 + 15 + 1 + 5 = 27 <= 31.
     ctlb_bit = 6 + 5 * len(hier)
+    bank_bit = ctlb_bit + (1 if has_ctlb else 0)
+    n_bits = bank_bit + (5 if has_banked else 0)
     assert n_bits <= 31
 
     # LRU stamp slots: every access site gets a fixed offset so one scalar
@@ -477,6 +507,25 @@ def _build_model(shape: MachineShape, batched: bool = False):
 
         if has_ctlb:
             bits.append(h_ctlb)          # appended: old bit indices keep
+        if has_banked:
+            # DRAM row-buffer tracking: one open-row id per bank rides
+            # the carry like the LRU tables.  Only accesses that
+            # actually reach memory touch a bank — bypassed PTE lines
+            # go straight there, everything else is the post-hierarchy
+            # miss chain (``ens`` after the loop above).  Sites update
+            # in program order (pte0..pte3, then data).
+            mem_ens = [(walk & (lvl < eff_n) & ~pwc_hits[lvl] & byp)
+                       | ens[lvl] for lvl in range(MAX_PTE)]
+            mem_ens.append(ens[MAX_PTE])
+            rows = sub["bank_row"]
+            for i in range(5):
+                bk = jax.lax.rem(jax.lax.div(lines[i], lines_per_row),
+                                 n_banks)
+                rw = jax.lax.div(lines[i], lines_per_row * n_banks)
+                bits.append((rows[bk] == rw) & mem_ens[i])
+                rows = rows.at[jnp.where(mem_ens[i], bk, n_banks)].set(
+                    rw, mode="drop")
+            sub["bank_row"] = rows
         packed = (jnp.stack(bits)
                   * (1 << jnp.arange(n_bits, dtype=jnp.int32))).sum()
         return sub, stamp + n_slots, packed
@@ -506,13 +555,17 @@ def _build_model(shape: MachineShape, batched: bool = False):
             return (sub, stamp), packed
         return step
 
-    def epilogue(packed, work, is4k, valid, q, mt, dp):
+    def epilogue(packed, work, is4k, valid, q, mt, dp, lines=None):
         """Vectorized timing over the whole chunk.
 
         packed: (T, M, C) hit bits; work/is4k: (T, C); valid: (T,) — or
         (T, C) per-lane in the batched engine, where C is the fused
         B*cores axis; q: (M,) queue delay — (M, C) when batched (per-sim
-        windows expanded per lane) — constant within the chunk.
+        windows expanded per lane) — constant within the chunk.  Banked
+        memory generalizes q to a trailing bank axis ((M, banks) /
+        (M, C, banks)) and passes ``lines`` (T, M, C, 5), the line ids
+        of the five access sites, so each access gathers ITS bank's
+        queue window and row-hit discount.
         ``mt`` mechanism tables ((M,) leaves, or (C, M) per lane) and
         ``dp`` data params (scalars, or (C,) per lane) are operands.
         Re-derives the same gates the scan used (pure functions of the
@@ -536,7 +589,6 @@ def _build_model(shape: MachineShape, batched: bool = False):
         idealb = mb(mt["ideal"])
         hugeb = mb(mt["huge"])
         bypb = mb(mt["bypass"])
-        qb = q[None, :, None] if q.ndim == 1 else q[None]   # (1, M, 1|C)
         mem4 = d4(dp["mem_lat"])
         hier_lat = [dp["l1_lat"], dp["l2_lat"], dp["l3_lat"]][:len(hier)]
         # multi-stack remote-hop penalty per memory access: co-locating
@@ -546,6 +598,25 @@ def _build_model(shape: MachineShape, batched: bool = False):
         pen = d3(dp["stack_pen"]) * jnp.where(mb(mt["colocate"]),
                                               0.1, 1.0)
         pen4 = pen[..., None]
+
+        # per-access memory cost at each of the five line sites.
+        # Bounded: flat latency + the mech's aggregate queue window.
+        # Banked: closed-row latency, minus the precharge+activate the
+        # scan-tracked row hit skips, plus the access's OWN bank's queue
+        # window (gathered by bank index) — contiguous flat-leaf spans
+        # keep their row open, scattered radix nodes mostly do not.
+        if has_banked:
+            rowhit = jnp.stack([bit(bank_bit + i) for i in range(5)], -1)
+            bank5 = (lines // lines_per_row) % n_banks     # (T, M, C, 5)
+            qfull = q[None, :, None, :] if q.ndim == 2 else q[None]
+            q_acc = jnp.take_along_axis(
+                jnp.broadcast_to(qfull, packed.shape + (n_banks,)),
+                bank5, axis=-1)                            # (T, M, C, 5)
+            mem_cost = (mem4 - rowhit * d4(dp["row_save"])
+                        + q_acc + pen4)
+        else:
+            qb = q[None, :, None] if q.ndim == 1 else q[None]  # (1,M,1|C)
+            mem_cost = mem4 + qb[..., None] + pen4
 
         h_l1tlb, h_l2tlb = bit(0), bit(1)
         en0 = validb & ~idealb & ~(mb(mt["segment"]) & ~is4kb)
@@ -565,7 +636,7 @@ def _build_model(shape: MachineShape, batched: bool = False):
             lat = lat + jnp.where(reached, d4(hier_lat[h_i]), 0.0)
             went_mem = went_mem & ~h
             reached = reached & ~h
-        lat = lat + jnp.where(reached, mem4 + qb[..., None] + pen4, 0.0)
+        lat = lat + jnp.where(reached, mem_cost, 0.0)
 
         # per-PTE-level walk latency: PWC hit beats everything; NDPage
         # bypass goes straight to memory; cached mechanisms pay the chain
@@ -574,7 +645,7 @@ def _build_model(shape: MachineShape, batched: bool = False):
                   & (jnp.arange(MAX_PTE) < eff_n[..., None]))
         need_mem = pte_en & ~pwc_hit
         pte_lat = jnp.where(bypb[..., None],
-                            mem4 + qb[..., None] + pen4,
+                            mem_cost[..., :MAX_PTE],
                             lat[..., :MAX_PTE])
         pte_lat = jnp.where(pwc_hit, d4(dp["pwc_lat"]), pte_lat)
         pte_lat = jnp.where(pte_en, pte_lat, 0.0)
@@ -627,8 +698,16 @@ def _build_model(shape: MachineShape, batched: bool = False):
             "data_l1_miss": f32(validb & ~bit(6 + MAX_PTE)),
             "data_mem": f32(data_mem),
         }
-        mem_n = (pte_mem.astype(jnp.float32).sum(axis=(0, -1))
-                 + data_mem.astype(jnp.float32).sum(axis=0))
+        if has_banked:
+            # per-bank demand totals for the per-bank queue windows:
+            # (M, C, banks) — the caller folds the core axis per sim
+            acc5 = jnp.concatenate([pte_mem, data_mem[..., None]], -1)
+            onehot = bank5[..., None] == jnp.arange(n_banks)
+            mem_n = (acc5[..., None] & onehot).astype(
+                jnp.float32).sum(axis=(0, 3))
+        else:
+            mem_n = (pte_mem.astype(jnp.float32).sum(axis=(0, -1))
+                     + data_mem.astype(jnp.float32).sum(axis=0))
         return cnt, step_cyc.sum(axis=0), mem_n
 
     return make_step, epilogue
@@ -656,6 +735,10 @@ def _chunk_runner(shape: MachineShape, walk_fns: Tuple, chunk: int,
     every sharding of the B axis."""
     make_step, epilogue = _build_model(shape, batched=batch)
     table_names = tuple(n for n, _, _ in shape.tables)
+    has_banked = shape.memory[0] == "banked"
+    # banked memory: per-bank open-row ids join the scan carry, and the
+    # epilogue needs the raw line ids to gather per-bank queue windows
+    carry_names = table_names + (("bank_row",) if has_banked else ())
 
     def walk_lines(vpn, is4k, huge):
         """(..., C) vpns -> (..., C, M, MAX_PTE) PTE line ids.  ``huge``
@@ -676,27 +759,44 @@ def _chunk_runner(shape: MachineShape, walk_fns: Tuple, chunk: int,
         return jnp.stack(per_mech, axis=-2)
 
     def _queue(clock, mem_accs, service):
-        # queue delay from aggregate demand measured so far (per mech,
-        # per sim).  Bounded-linear law: banked DRAM degrades gently up
-        # to saturation (an M/M/1 knee over-penalizes small traffic
-        # deltas at high load).  Held constant within the chunk.
+        # queue delay from demand measured so far (per mech, per sim).
+        # Bounded-linear law: DRAM degrades gently up to saturation (an
+        # M/M/1 knee over-penalizes small traffic deltas at high load).
+        # Held constant within the chunk.  Banked: the same law applied
+        # per BANK (mem_accs carries a trailing bank axis and service
+        # is the per-bank occupancy) — traffic on one bank never delays
+        # another.
         elapsed = jnp.maximum(clock.mean(axis=-1), 1.0)
+        if has_banked:
+            rate = mem_accs / elapsed[..., None]
+            svc = (service if service.ndim == 0
+                   else service[:, None, None])
+            return MM.queue_delay(rate, svc)  # (M, bk) / batched (B, M, bk)
         rate = mem_accs / elapsed                 # aggregate accesses/cycle
         svc = service if service.ndim == 0 else service[:, None]
         rho = jnp.clip(rate * svc, 0.0, 0.96)
         return svc * rho * QUEUE_K                # (M,) / batched (B, M)
 
+    def _lines5(pte, vpn, off):
+        # the five access sites' line ids in epilogue orientation
+        # (T, M, C, 5): pte0..3 from the walk, then the data line
+        pm = jnp.swapaxes(pte, 1, 2)
+        dl = (vpn * 64 + off)[:, None, :, None]
+        return jnp.concatenate(
+            [pm, jnp.broadcast_to(dl, pm.shape[:-1] + (1,))], -1)
+
     def run(state, xs, mt, dp):
         vpn, off, work, is4k, valid = xs
         pte = walk_lines(vpn, is4k, mt["huge"])
         q = _queue(state["clock"], state["mem_accs"], dp["service"])
-        carry = ({k: state[k] for k in table_names}, state["stamp"])
+        carry = ({k: state[k] for k in carry_names}, state["stamp"])
         (tabs, stamp), packed = jax.lax.scan(
             make_step(mt), carry, (vpn, off, pte, is4k, valid))
         # scan emits (T, C, M); the cheap summary arrays go back to the
         # public (T, M, C) orientation here
-        cnt, cyc, mem_n = epilogue(jnp.swapaxes(packed, 1, 2),
-                                   work, is4k, valid, q, mt, dp)
+        cnt, cyc, mem_n = epilogue(
+            jnp.swapaxes(packed, 1, 2), work, is4k, valid, q, mt, dp,
+            lines=_lines5(pte, vpn, off) if has_banked else None)
 
         new_state = dict(tabs)
         new_state["stamp"] = stamp
@@ -723,26 +823,32 @@ def _chunk_runner(shape: MachineShape, walk_fns: Tuple, chunk: int,
         dp_l = {k: jnp.repeat(v, c, axis=0) for k, v in dp.items()}
         pte = walk_lines(vpn, is4k, mt_l["huge"])
         q = _queue(state["clock"], state["mem_accs"],
-                   dp["service"])                 # (B, M)
-        q_lane = jnp.repeat(q.T, c, axis=1)       # (M, B*C)
+                   dp["service"])                 # (B, M) / (B, M, bk)
+        if has_banked:                            # -> (M, B*C, bk)
+            q_lane = jnp.repeat(jnp.moveaxis(q, 0, 1), c, axis=1)
+        else:
+            q_lane = jnp.repeat(q.T, c, axis=1)   # (M, B*C)
 
         carry = (jax.tree.map(lambda a: a.reshape((b * c,) + a.shape[2:]),
-                              {k: state[k] for k in table_names}),
+                              {k: state[k] for k in carry_names}),
                  state["stamp"].reshape(b * c, m))
         (tabs, stamp), packed = jax.lax.scan(
             make_step(mt_l), carry, (vpn, off, pte, is4k, valid))
-        cnt, cyc, mem_n = epilogue(jnp.swapaxes(packed, 1, 2),
-                                   work, is4k, valid, q_lane, mt_l, dp_l)
+        cnt, cyc, mem_n = epilogue(
+            jnp.swapaxes(packed, 1, 2), work, is4k, valid, q_lane,
+            mt_l, dp_l,
+            lines=_lines5(pte, vpn, off) if has_banked else None)
 
-        def unfuse_mc(a):                          # (M, B*C) -> (B, M, C)
-            return jnp.moveaxis(a.reshape(a.shape[0], b, c), 1, 0)
+        def unfuse_mc(a):                 # (M, B*C, ...) -> (B, M, C, ...)
+            return jnp.moveaxis(
+                a.reshape((a.shape[0], b, c) + a.shape[2:]), 1, 0)
 
         new_state = jax.tree.map(
             lambda a: a.reshape((b, c) + a.shape[1:]), tabs)
         new_state["stamp"] = stamp.reshape(b, c, m)
         new_state["clock"] = state["clock"] + unfuse_mc(cyc)
         new_state["mem_accs"] = (state["mem_accs"]
-                                 + unfuse_mc(mem_n).sum(axis=-1))
+                                 + unfuse_mc(mem_n).sum(axis=2))
         new_state["counters"] = {
             k: state["counters"][k] + unfuse_mc(cnt[k])
             for k in state["counters"]}

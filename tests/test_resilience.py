@@ -191,7 +191,7 @@ class TestWatchdog:
 # ---------------------------------------------------------------------------
 @pytest.mark.slow
 class TestSweepCheckpoint:
-    GRID = {"mem_latency": (100, 170), "pwc_entries": (16, 32)}
+    GRID = {"memory.latency": (100, 170), "pwc_entries": (16, 32)}
 
     def _sweep(self, **kw):
         from repro.sim import sweep

@@ -48,9 +48,9 @@ class TestGridEdgeCases:
         _assert_results_equal(r.point(workload="rnd"), want, "1-point")
 
     def test_bucketing_never_splits_shared_shapes(self):
-        """Value-only axes (mem_latency) must never split a shape
+        """Value-only axes (memory.latency) must never split a shape
         bucket; shape axes (pwc_entries) split exactly per value."""
-        r = sweep({"mem_latency": (100, 140, 170),
+        r = sweep({"memory.latency": (100, 140, 170),
                    "pwc_entries": (16, 32),
                    "workload": ("rnd",)},
                   cores=2, trace_len=LEN, chunk=CHUNK_A)
@@ -63,7 +63,8 @@ class TestGridEdgeCases:
         assert r.stats["runner_compiles"] == 2  # fresh chunk -> exact
 
     def test_value_only_grid_is_one_bucket_one_compile(self):
-        r = sweep({"mem_latency": (100, 170), "mem_service": (14.0, 40.0),
+        r = sweep({"memory.latency": (100, 170),
+                   "memory.service": (14.0, 40.0),
                    "workload": ("rnd", "bc")},
                   cores=2, trace_len=LEN, chunk=CHUNK_B)
         assert r.stats["points"] == 8
@@ -91,7 +92,7 @@ class TestGridEdgeCases:
 class TestSelect:
     @pytest.fixture(scope="class")
     def res(self):
-        return sweep({"mem_latency": (100, 170),
+        return sweep({"memory.latency": (100, 170),
                       "workload": ("rnd", "bc", "bfs")},
                      cores=2, trace_len=LEN, chunk=512)
 
@@ -122,18 +123,19 @@ class TestSelect:
             res.select(workload="rnd").speedup("ndpage"))
 
     def test_point_and_errors(self, res):
-        p = res.point(mem_latency=100, workload="bc")
+        p = res.point(**{"memory.latency": 100, "workload": "bc"})
         assert p.mechs[0] == "radix"
         with pytest.raises(KeyError, match="every axis pinned"):
-            res.point(mem_latency=100)
+            res.point(**{"memory.latency": 100})
         with pytest.raises(KeyError, match="unknown sweep axes"):
             res.select(nope=1)
         with pytest.raises(KeyError, match="no value"):
-            res.select(mem_latency=999)
+            res.select(**{"memory.latency": 999})
 
     def test_chained_select_matches_direct_point(self, res):
-        a = res.select(mem_latency=170).select(workload="bfs").results[()]
-        b = res.point(mem_latency=170, workload="bfs")
+        a = (res.select(**{"memory.latency": 170})
+             .select(workload="bfs").results[()])
+        b = res.point(**{"memory.latency": 170, "workload": "bfs"})
         _assert_results_equal(a, b, "chained select")
 
 

@@ -9,7 +9,7 @@ all of them:
   * count partition: 0 <= walks <= l1tlb_misses <= accesses, and the
     ideal mechanism never walks;
   * latencies are non-negative and total cycles are MONOTONE in
-    ``mem_latency`` (a value-only change — same compiled graph);
+    ``memory.latency`` (a value-only change — same compiled graph);
   * a single ``simulate`` call and lanes of one ``simulate_batch``
     dispatch are BIT-EXACT per mechanism;
   * a pinned per-mechanism regression table
@@ -96,14 +96,16 @@ class TestDifferentialInvariants:
                                             all_mechs):
         mach = zoo_test_machine()
         trace = smoke_trace("rnd", ZOO_TEST_CORES)
-        slow = dataclasses.replace(mach,
-                                   mem_latency=mach.mem_latency * 2,
-                                   name="zoo-test-slowmem")
+        slow = dataclasses.replace(
+            mach,
+            memory=dataclasses.replace(mach.memory,
+                                       latency=mach.memory.latency * 2),
+            name="zoo-test-slowmem")
         base = simulate(mach, trace, mechs=all_mechs, chunk=512)
         worse = simulate(slow, trace, mechs=all_mechs, chunk=512)
         for i, name in enumerate(all_mechs):
             assert (worse.cycles[i] >= base.cycles[i] - 1e-3).all(), \
-                f"{name}: cycles not monotone in mem_latency"
+                f"{name}: cycles not monotone in memory latency"
 
     def test_single_vs_batch_bit_exact(self, smoke_trace, zoo_res,
                                        all_mechs):
